@@ -1,0 +1,47 @@
+"""Paper Fig. 12: predicted vs actual power/time for the jobs as scheduled
+(the in-schedule prediction tracking that makes Algorithm 1 work)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv, fixtures
+from repro.core import Testbed, make_workload, run_schedule
+from repro.core.metrics import mape
+
+
+def main() -> dict:
+    f = fixtures()
+    t0 = time.time()
+    pt, at, pp, ap = [], [], [], []
+    for seed in range(6):
+        jobs = make_workload(f["apps"], f["testbed"], seed=seed)
+        r = run_schedule(jobs, "d-dvfs", Testbed(seed=100 + seed),
+                         predictor=f["predictor"],
+                         app_features=f["features"])
+        for x in r.records:
+            if x.predicted_time is not None:
+                pt.append(x.predicted_time)
+                at.append(x.time_s)
+                pp.append(x.predicted_power)
+                ap.append(x.power_w)
+    dt = time.time() - t0
+    time_mape = mape(at, pt)
+    power_mape = mape(ap, pp)
+    csv("fig12_tracking", dt,
+        f"n={len(pt)} time_mape={100*time_mape:.1f}% "
+        f"power_mape={100*power_mape:.1f}%")
+    # per-job examples (first seed's jobs)
+    for i in range(min(6, len(pt))):
+        csv(f"fig12_job{i}", dt,
+            f"T_pred={pt[i]:.2f}s T_act={at[i]:.2f}s "
+            f"P_pred={pp[i]:.1f}W P_act={ap[i]:.1f}W")
+    print(f"# claim[predictions track actuals]: time MAPE "
+          f"{100*time_mape:.1f}%, power MAPE {100*power_mape:.1f}% "
+          f"({'OK' if time_mape < 0.25 and power_mape < 0.15 else 'FAIL'})")
+    return {"time_mape": time_mape, "power_mape": power_mape}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Kernel micro-benchmarks: wall time per call of the pure-jnp oracle on CPU
+(the Pallas kernels only execute in interpret mode here — their TPU
+performance is characterized structurally in EXPERIMENTS.md §Roofline), plus
+the GBDT scheduler-hot-loop comparison vs the numpy ensemble walk."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def main() -> dict:
+    from repro.kernels import ref, ops
+    out = {}
+
+    # flash attention oracle (B, S, H, hd) model layout
+    B, S, H, K, hd = 1, 1024, 8, 2, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, S, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, K, S, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, K, S, hd))
+    fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, True))
+    dt = _time(fa, q, k, v)
+    flops = 4 * B * H * S * S * hd / 2  # causal
+    csv("kernel_flash_ref", dt,
+        f"S={S} gflops={flops/1e9:.1f} cpu_gflops_s={flops/dt/1e9:.1f}")
+    out["flash_ref_s"] = dt
+
+    # mamba scan oracle
+    Bm, L, Di, N = 1, 2048, 512, 16
+    args = (
+        jax.random.normal(jax.random.PRNGKey(3), (Bm, L, Di)),
+        jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(4), (Bm, L, Di))) * 0.1,
+        -jnp.exp(jax.random.normal(jax.random.PRNGKey(5), (Di, N)) * 0.3),
+        jax.random.normal(jax.random.PRNGKey(6), (Bm, L, N)),
+        jax.random.normal(jax.random.PRNGKey(7), (Bm, L, N)),
+        jnp.ones(Di),
+    )
+    ms = jax.jit(lambda *a: ref.mamba_scan_ref(*a)[0])
+    dt = _time(ms, *args)
+    csv("kernel_mamba_ref", dt, f"L={L} Di={Di} tokens_per_s={Bm*L/dt:.0f}")
+    out["mamba_ref_s"] = dt
+
+    # gbdt predict: kernel-layout jnp oracle vs numpy model.predict on the
+    # scheduler's real workload size (jobs x clocks rows, 2x1200 trees)
+    from repro.core.gbdt import GBDTParams, fit_gbdt
+    rng = np.random.default_rng(0)
+    Xtr = rng.normal(size=(768, 23))
+    ytr = np.sin(Xtr[:, 0]) + Xtr[:, 1]
+    m = fit_gbdt(Xtr, ytr, GBDTParams(iterations=1200, depth=4))
+    Xq = rng.normal(size=(768, 23))  # 12 jobs x 64 clocks
+    t0 = time.perf_counter()
+    for _ in range(5):
+        m.predict(Xq)
+    t_np = (time.perf_counter() - t0) / 5
+    jit_ref = jax.jit(lambda X: ref.gbdt_predict_ref(
+        X, jnp.asarray(m.feats), jnp.asarray(m.thresholds),
+        jnp.asarray(m.leaves), m.base))
+    t_jnp = _time(jit_ref, jnp.asarray(Xq))
+    csv("kernel_gbdt", t_jnp,
+        f"rows=768 trees=1200 numpy={t_np*1e3:.1f}ms "
+        f"jnp_oracle={t_jnp*1e3:.1f}ms speedup={t_np/t_jnp:.1f}x")
+    out["gbdt_np_s"] = t_np
+    out["gbdt_jnp_s"] = t_jnp
+    return out
+
+
+if __name__ == "__main__":
+    main()

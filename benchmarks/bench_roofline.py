@@ -1,0 +1,50 @@
+"""§Roofline table: per (arch x shape) three roofline terms from the cached
+dry-run artifacts (results/dryrun_single.json — single-pod 16x16 mesh)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import csv
+
+_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+RESULTS = next((os.path.join(_DIR, f) for f in
+                ("dryrun_final.json", "dryrun_single.json")
+                if os.path.exists(os.path.join(_DIR, f))),
+               os.path.join(_DIR, "dryrun_final.json"))
+
+
+def main() -> dict:
+    if not os.path.exists(RESULTS):
+        print("# roofline: results/dryrun_single.json not found — run "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all first")
+        return {}
+    with open(RESULTS) as f:
+        rows = json.load(f)
+    out = {}
+    for r in rows:
+        key = f"{r['arch']}/{r['shape']}"
+        if r["status"] == "skipped":
+            csv(f"roofline_{key}", 0.0, f"SKIPPED: {r['reason']}")
+            continue
+        if r["status"] != "ok" or "roofline" not in r:
+            csv(f"roofline_{key}", 0.0, f"status={r['status']}")
+            continue
+        rl = r["roofline"]
+        mem_gb = r["memory_per_device"]["total_bytes"] / 1e9
+        csv(f"roofline_{key}", r.get("compile_s", 0),
+            f"compute={rl['compute_s']:.4f}s memory={rl['memory_s']:.4f}s "
+            f"coll={rl['collective_s']:.4f}s dom={rl['dominant']} "
+            f"useful={rl['useful_ratio']:.2f} mem/dev={mem_gb:.1f}GB "
+            f"fits={r['fits_hbm']}")
+        out[key] = rl
+    n_ok = len(out)
+    doms = {}
+    for rl in out.values():
+        doms[rl["dominant"]] = doms.get(rl["dominant"], 0) + 1
+    print(f"# roofline summary: {n_ok} cells analyzed; dominant terms: {doms}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Paper Table IV: K-means clustering + correlated-application selection, and
+the robustness evaluation (predict each app's energy/time from its
+correlate's profile; RMSE degrades vs own-profile but stays usable).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv, fixtures
+from repro.core import CorrelationIndex, EnergyTimePredictor, PredictorConfig
+from repro.core.features import clock_features
+from repro.core.kmeans import elbow_sse
+from repro.core.metrics import rmse
+
+
+def main() -> dict:
+    f = fixtures()
+    names = [a.name for a in f["apps"]]
+    F = np.stack([f["features"][n] for n in names])
+    t0 = time.time()
+
+    sse = elbow_sse(F, range(1, 9))
+    idx = CorrelationIndex(k=5, random_state=0).fit(names, F)
+    rows = idx.table()
+    dt = time.time() - t0
+    for name, label, corr in rows:
+        csv(f"table4_{name}", dt, f"cluster={label} correlated={corr}")
+    csv("table4_elbow", dt,
+        " ".join(f"k={k}:sse={v:.1f}" for k, v in sse.items()))
+
+    # robustness: leave-one-app-out + correlated-profile prediction
+    t0 = time.time()
+    X, yp, yt, g = f["X"], f["y_power"], f["y_time"], f["groups"]
+    tb = f["testbed"]
+    clocks = tb.dvfs.clock_list()
+    own_p, own_t, corr_p, corr_t = [], [], [], []
+    for gi, app in enumerate(f["apps"]):
+        tr = g != gi
+        pred = EnergyTimePredictor(PredictorConfig()).fit(
+            X[tr], yp[tr], yt[tr])
+        corr = idx.correlated(f["features"][app.name], exclude=app.name)
+        rows_own = np.stack([
+            np.concatenate([f["features"][app.name],
+                            clock_features(c, tb.dvfs)]) for c in clocks])
+        rows_corr = np.stack([
+            np.concatenate([f["features"][corr],
+                            clock_features(c, tb.dvfs)]) for c in clocks])
+        true_p, true_t = yp[g == gi], yt[g == gi]
+        own_p.append(rmse(true_p, pred.predict_power(rows_own)))
+        own_t.append(rmse(true_t, pred.predict_time(rows_own)))
+        corr_p.append(rmse(true_p, pred.predict_power(rows_corr)))
+        corr_t.append(rmse(true_t, pred.predict_time(rows_corr)))
+    dt = time.time() - t0
+    res = {
+        "own_power": float(np.mean(own_p)),
+        "own_time": float(np.mean(own_t)),
+        "corr_power": float(np.mean(corr_p)),
+        "corr_time": float(np.mean(corr_t)),
+    }
+    csv("table4_robustness", dt,
+        f"own(P={res['own_power']:.2f}W,T={res['own_time']:.3f}s) "
+        f"corr(P={res['corr_power']:.2f}W,T={res['corr_time']:.3f}s)")
+    ratio_p = res["corr_power"] / max(res["own_power"], 1e-9)
+    print(f"# claim[correlated degrades but usable]: power x{ratio_p:.1f}, "
+          f"paper: 0.38→3.19 (x8.4); usable "
+          f"({'OK' if res['corr_power'] < 40 else 'FAIL'})")
+    return {"rows": rows, **res}
+
+
+if __name__ == "__main__":
+    main()

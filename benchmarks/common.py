@@ -1,0 +1,34 @@
+"""Shared fixtures for the paper-reproduction benchmarks (built once)."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.configs.paper_suite import PAPER_APPS
+from repro.core import (EnergyTimePredictor, PredictorConfig, Testbed,
+                        build_dataset, profile_features)
+
+
+@functools.lru_cache(maxsize=1)
+def fixtures():
+    t0 = time.time()
+    tb = Testbed(seed=0)
+    apps = list(PAPER_APPS)
+    X, y_power, y_time, groups = build_dataset(apps, tb, seed=0)
+    rng = np.random.default_rng(7)
+    feats = {a.name: profile_features(a, tb, rng=rng) for a in apps}
+    predictor = EnergyTimePredictor(PredictorConfig()).fit(X, y_power, y_time)
+    return {
+        "testbed": tb,
+        "apps": apps,
+        "X": X, "y_power": y_power, "y_time": y_time, "groups": groups,
+        "features": feats,
+        "predictor": predictor,
+        "setup_s": time.time() - t0,
+    }
+
+
+def csv(name: str, wall_s: float, derived: str):
+    print(f"{name},{wall_s * 1e6:.0f},{derived}")

@@ -1,0 +1,69 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark, plus
+``# claim[...]`` validation lines tying each result to the paper's numbers.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig3,fig78,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("fig3", "benchmarks.bench_fig3_models",
+     "Fig. 3: model RMSE comparison"),
+    ("table3", "benchmarks.bench_table3_gridsearch",
+     "Table III: CatBoost grid search"),
+    ("fig45", "benchmarks.bench_fig45_features",
+     "Fig. 4/5: feature importance + threshold"),
+    ("table4", "benchmarks.bench_table4_clustering",
+     "Table IV: clustering + correlated apps"),
+    ("fig78", "benchmarks.bench_fig78_energy",
+     "Fig. 7/8: energy by policy"),
+    ("fig910", "benchmarks.bench_fig910_deadlines",
+     "Fig. 9/10: deadlines + myopic ablation"),
+    ("fig11", "benchmarks.bench_fig11_clocks",
+     "Fig. 11: clock selection"),
+    ("fig12", "benchmarks.bench_fig12_accuracy",
+     "Fig. 12: prediction tracking"),
+    ("beyond", "benchmarks.bench_beyond",
+     "Beyond paper: oracle gap, multi-device, backlog, stragglers"),
+    ("kernels", "benchmarks.bench_kernels",
+     "Kernel micro-benchmarks"),
+    ("roofline", "benchmarks.bench_roofline",
+     "§Roofline table from the dry-run cache"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench keys")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = []
+    t_all = time.time()
+    for key, module, title in BENCHES:
+        if only and key not in only:
+            continue
+        print(f"\n=== {title} ({module}) ===")
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main()
+            print(f"# {key} done in {time.time() - t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failures.append(key)
+    print(f"\n=== benchmarks finished in {time.time() - t_all:.1f}s; "
+          f"failures: {failures or 'none'} ===")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

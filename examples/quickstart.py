@@ -1,0 +1,46 @@
+"""Quickstart: the paper's pipeline end to end in ~1 minute on CPU.
+
+1. Profile the 12-application suite on the simulated DVFS testbed.
+2. Train the CatBoost-style power & time predictors.
+3. Schedule a deadline workload with Algorithm 1 (D-DVFS) vs DC/MC.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.paper_suite import PAPER_APPS
+from repro.core import (EnergyTimePredictor, PredictorConfig, Testbed,
+                        build_dataset, make_workload, profile_features,
+                        run_schedule)
+
+
+def main():
+    testbed = Testbed(seed=0)
+    apps = list(PAPER_APPS)
+
+    print("== 1. profiling campaign (12 apps x 64 clock pairs) ==")
+    X, y_power, y_time, groups = build_dataset(apps, testbed, seed=0)
+    print(f"   dataset: {X.shape[0]} rows x {X.shape[1]} features")
+
+    print("== 2. train power/time predictors (oblivious-tree GBDT) ==")
+    predictor = EnergyTimePredictor(PredictorConfig()).fit(X, y_power, y_time)
+    rng = np.random.default_rng(7)
+    feats = {a.name: profile_features(a, testbed, rng=rng) for a in apps}
+
+    print("== 3. deadline-aware scheduling ==")
+    jobs = make_workload(apps, testbed, seed=0)
+    results = {}
+    for policy in ("mc", "dc", "d-dvfs"):
+        r = run_schedule(jobs, policy, Testbed(seed=100),
+                         predictor=predictor, app_features=feats)
+        results[policy] = r
+        print(f"   {policy:7s} energy={r.total_energy:7.1f} J  "
+              f"misses={r.misses}  makespan={r.makespan:5.1f} s")
+    dd, dc, mc = (results[p].total_energy for p in ("d-dvfs", "dc", "mc"))
+    print(f"\nD-DVFS saves {100*(1-dd/dc):.1f}% vs DC and "
+          f"{100*(1-dd/mc):.1f}% vs MC with {results['d-dvfs'].misses} "
+          f"deadline misses (paper: 13.8% / 25.2%, zero misses).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Render EXPERIMENTS.md §Roofline table from results/dryrun_single.json."""
+import json
+import sys
+
+path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_single.json"
+rows = json.load(open(path))
+
+print("| arch | shape | compute s | memory s | collective s | dominant | "
+      "useful | mem/dev GB | fits 16GB |")
+print("|---|---|---|---|---|---|---|---|---|")
+for r in rows:
+    if r["status"] == "skipped":
+        print(f"| {r['arch']} | {r['shape']} | — | — | — | *skipped* | — | — "
+              f"| n/a ({r['reason'][:40]}) |")
+        continue
+    if r["status"] != "ok":
+        print(f"| {r['arch']} | {r['shape']} | ERROR: "
+              f"{r.get('error','')[:60]} |")
+        continue
+    rl = r["roofline"]
+    m = r["memory_per_device"]["total_bytes"] / 1e9
+    print(f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.4f} | "
+          f"{rl['memory_s']:.4f} | {rl['collective_s']:.4f} | "
+          f"**{rl['dominant']}** | {rl['useful_ratio']:.2f} | {m:.1f} | "
+          f"{'yes' if r['fits_hbm'] else 'NO'} |")
+
+ok = [r for r in rows if r["status"] == "ok"]
+doms = {}
+for r in ok:
+    d = r["roofline"]["dominant"]
+    doms[d] = doms.get(d, 0) + 1
+print(f"\ncells: {len(ok)} ok, "
+      f"{sum(r['status']=='skipped' for r in rows)} skipped, "
+      f"{sum(r['status']=='error' for r in rows)} error; dominant: {doms}")

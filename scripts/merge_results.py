@@ -1,0 +1,31 @@
+"""Merge the sweep + re-run cell results into results/dryrun_final.json and
+recompute useful_ratio with the corrected audio MODEL_FLOPS formula."""
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.configs import get_config            # noqa: E402
+from repro.configs.base import SHAPES           # noqa: E402
+from repro.roofline.analysis import model_flops  # noqa: E402
+
+base = json.load(open("results/dryrun_single.json"))
+fixed = json.load(open("results/dryrun_final_cells.json"))
+fixed_keys = {(r["arch"], r["shape"]) for r in fixed}
+
+merged = [r for r in base if (r["arch"], r["shape"]) not in fixed_keys]
+merged += fixed
+order = {a: i for i, a in enumerate(sorted({r["arch"] for r in merged}))}
+shp = {s: i for i, s in enumerate(SHAPES)}
+merged.sort(key=lambda r: (order[r["arch"]], shp[r["shape"]]))
+
+for r in merged:
+    if r.get("status") == "ok" and "roofline" in r:
+        cfg = get_config(r["arch"])
+        mf = model_flops(cfg, SHAPES[r["shape"]], r["n_chips"])
+        rl = r["roofline"]
+        rl["model_flops"] = mf
+        rl["useful_ratio"] = mf / rl["flops"] if rl["flops"] else 0.0
+
+json.dump(merged, open("results/dryrun_final.json", "w"), indent=1)
+ok = sum(r["status"] == "ok" for r in merged)
+print(f"merged {len(merged)} cells ({ok} ok) -> results/dryrun_final.json")

@@ -1,0 +1,20 @@
+"""Core: the paper's contribution — data-driven DVFS + deadline scheduling."""
+from .dvfs import ClockPair, DVFSConfig, V5E_DVFS
+from .simulator import AppProfile, Measurement, Testbed
+from .features import (ALL_INPUT_NAMES, CATEGORICAL_FEATURES, FEATURE_NAMES,
+                       build_dataset, profile_features)
+from .predictor import (EnergyTimePredictor, PredictorConfig, loocv_rmse,
+                        normalized_rmse)
+from .correlate import CorrelationIndex
+from .workload import Job, make_workload
+from .scheduler import POLICIES, ScheduleResult, run_schedule
+
+__all__ = [
+    "ClockPair", "DVFSConfig", "V5E_DVFS",
+    "AppProfile", "Measurement", "Testbed",
+    "ALL_INPUT_NAMES", "CATEGORICAL_FEATURES", "FEATURE_NAMES",
+    "build_dataset", "profile_features",
+    "EnergyTimePredictor", "PredictorConfig", "loocv_rmse", "normalized_rmse",
+    "CorrelationIndex", "Job", "make_workload",
+    "POLICIES", "ScheduleResult", "run_schedule",
+]

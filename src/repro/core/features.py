@@ -1,0 +1,178 @@
+"""nvprof-analogue feature extraction (paper §III-A, Table II).
+
+The paper profiles each application once per clock pair with nvprof (120+
+counters) and keeps the top-20. On TPU there is no nvprof; the equivalent
+pre-execution profile is the **XLA compiled artifact** (FLOPs, bytes,
+collective bytes, op mix) plus **one measured run at the default clock**
+(the paper's own protocol for new applications: "minimal profiling data from
+a default clock frequency execution").
+
+Feature vector layout (names kept nvprof-flavored where the analogue is
+exact):
+
+  static (compiled artifact):
+    log_flops, log_bytes, log_coll_bytes, arith_intensity, coll_frac,
+    dot_frac, elem_frac, n_chips_log
+  measured at default clock:
+    sm            — core-domain utilization (paper's #1 feature, both models)
+    mem_util      — dram_utilisation analogue
+    achieved_tflops, achieved_bw_frac — ipc / gld_efficiency analogues
+    stall_mem_frac  — stall_memory_throttle analogue
+    stall_dep_frac  — stall_exec_dependency analogue
+    power_default, time_default_log, energy_default_log
+  categorical (CatBoost-style ordered target statistics downstream):
+    bottleneck_class  — {0: compute, 1: memory, 2: collective, 3: overhead}
+    kind_class        — {0: kernel, 1: train, 2: prefill, 3: decode}
+  clock inputs (appended per training row):
+    s_core, s_mem, v_core
+
+Total: 20 features = paper's top-20 budget (their threshold analysis, Fig. 5,
+shows 20 suffice; we adopt that cap by construction and verify with our own
+threshold sweep in the Fig. 4/5 benchmark).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .dvfs import ClockPair, DVFSConfig
+from .simulator import AppProfile, Testbed
+
+__all__ = [
+    "FEATURE_NAMES",
+    "CLOCK_FEATURE_NAMES",
+    "ALL_INPUT_NAMES",
+    "CATEGORICAL_FEATURES",
+    "profile_features",
+    "build_dataset",
+]
+
+FEATURE_NAMES: tuple[str, ...] = (
+    "log_flops",
+    "log_bytes",
+    "log_coll_bytes",
+    "arith_intensity_log",
+    "coll_frac",
+    "dot_frac",
+    "elem_frac",
+    "n_chips_log",
+    "sm",                    # paper's top feature
+    "mem_util",
+    "achieved_tflops",
+    "achieved_bw_frac",
+    "stall_mem_frac",
+    "stall_dep_frac",
+    "power_default",
+    "time_default_log",
+    "energy_default_log",
+    "overhead_frac",
+    "bottleneck_class",      # categorical
+    "kind_class",            # categorical
+)
+CLOCK_FEATURE_NAMES: tuple[str, ...] = ("s_core", "s_mem", "v_core")
+ALL_INPUT_NAMES: tuple[str, ...] = FEATURE_NAMES + CLOCK_FEATURE_NAMES
+
+# indices (into ALL_INPUT_NAMES) of categorical columns
+CATEGORICAL_FEATURES: tuple[int, ...] = (
+    FEATURE_NAMES.index("bottleneck_class"),
+    FEATURE_NAMES.index("kind_class"),
+)
+
+_KIND_CLASS = {"kernel": 0.0, "train": 1.0, "prefill": 2.0, "decode": 3.0}
+
+
+def profile_features(
+    app: AppProfile,
+    testbed: Testbed,
+    rng: np.random.Generator | None = None,
+) -> np.ndarray:
+    """One default-clock profiling session → 20-dim feature vector."""
+    d: DVFSConfig = testbed.dvfs
+    clock = d.default_clock
+    meas = testbed.run(app, clock, rng=rng)  # the single default-clock run
+
+    t = meas.time_s
+    flops_rate = app.flops / t
+    bw = app.hbm_bytes / t
+    t_compute = app.flops / (d.peak_flops * clock.s_core)
+    t_mem = app.hbm_bytes / (d.hbm_bw * clock.s_mem)
+    t_coll = app.coll_bytes / d.ici_bw
+    sm = min(t_compute / t, 1.0)
+    mem_util = min(t_mem / t, 1.0)
+    overhead_frac = app.overhead_s / t
+
+    terms = {
+        0.0: t_compute,
+        1.0: t_mem,
+        2.0: t_coll,
+        3.0: app.overhead_s,
+    }
+    bottleneck = max(terms, key=terms.get)
+
+    total_work = app.flops + app.hbm_bytes + app.coll_bytes
+    feats = {
+        "log_flops": np.log10(app.flops + 1.0),
+        "log_bytes": np.log10(app.hbm_bytes + 1.0),
+        "log_coll_bytes": np.log10(app.coll_bytes + 1.0),
+        "arith_intensity_log": np.log10(app.arithmetic_intensity + 1e-6),
+        "coll_frac": app.coll_bytes / total_work,
+        "dot_frac": app.flops / total_work,
+        "elem_frac": app.hbm_bytes / total_work,
+        "n_chips_log": np.log2(app.n_chips),
+        "sm": sm,
+        "mem_util": mem_util,
+        "achieved_tflops": flops_rate / 1e12,
+        "achieved_bw_frac": bw / d.hbm_bw,
+        "stall_mem_frac": max(0.0, min((t_mem - t_compute) / t, 1.0)),
+        "stall_dep_frac": app.stall_frac,
+        "power_default": meas.power_w,
+        "time_default_log": np.log10(t),
+        "energy_default_log": np.log10(meas.energy_j),
+        "overhead_frac": overhead_frac,
+        "bottleneck_class": bottleneck,
+        "kind_class": _KIND_CLASS.get(app.kind, 0.0),
+    }
+    return np.array([feats[n] for n in FEATURE_NAMES], dtype=np.float64)
+
+
+def clock_features(clock: ClockPair, d: DVFSConfig) -> np.ndarray:
+    return np.array(
+        [clock.s_core, clock.s_mem, d.voltage(clock.s_core)], dtype=np.float64
+    )
+
+
+def build_dataset(
+    apps: list[AppProfile],
+    testbed: Testbed,
+    clocks: list[ClockPair] | None = None,
+    seed: int = 0,
+    app_features: dict[str, np.ndarray] | None = None,
+):
+    """Training data: rows = app × clock pair (the paper's profiling campaign).
+
+    Targets are *measured* (noisy) power and time at each clock — like the
+    paper's separate energy/time measurement runs per clock setting.
+
+    Returns (X, y_power, y_time, groups) with groups = app index per row
+    (for leave-one-application-out CV, the paper's §III-B protocol).
+    """
+    d = testbed.dvfs
+    clocks = clocks or d.clock_list()
+    rng = np.random.default_rng(seed)
+    X_rows, y_p, y_t, groups = [], [], [], []
+    for gi, app in enumerate(apps):
+        if app_features is not None and app.name in app_features:
+            f = app_features[app.name]
+        else:
+            f = profile_features(app, testbed, rng=rng)
+        for c in clocks:
+            m = testbed.run(app, c, rng=rng)
+            X_rows.append(np.concatenate([f, clock_features(c, d)]))
+            y_p.append(m.power_w)
+            y_t.append(m.time_s)
+            groups.append(gi)
+    return (
+        np.stack(X_rows),
+        np.array(y_p),
+        np.array(y_t),
+        np.array(groups, dtype=np.int64),
+    )

@@ -1,0 +1,116 @@
+"""K-means (k-means++ init, Lloyd iterations) for application correlation.
+
+The paper (§III-D, Table IV) clusters exhaustively-profiled applications with
+K-means (k = 5 chosen by the weighted-SSE elbow) so a *new* application —
+profiled at the default clock only — can borrow the multi-frequency profile of
+its most time-similar cluster mate.
+
+Implemented in JAX (jit-compiled Lloyd sweep) with a numpy driver; data sizes
+are tiny so this is for fidelity + testability, not throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["KMeans", "elbow_sse", "choose_k_elbow"]
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _lloyd_step(X: jnp.ndarray, centers: jnp.ndarray, k: int):
+    d2 = jnp.sum((X[:, None, :] - centers[None, :, :]) ** 2, axis=-1)
+    assign = jnp.argmin(d2, axis=1)
+    one_hot = jax.nn.one_hot(assign, k, dtype=X.dtype)         # (n, k)
+    counts = one_hot.sum(axis=0)                               # (k,)
+    sums = one_hot.T @ X                                       # (k, d)
+    new_centers = sums / jnp.maximum(counts, 1.0)[:, None]
+    # keep empty clusters where they were
+    new_centers = jnp.where(counts[:, None] > 0, new_centers, centers)
+    sse = jnp.sum(jnp.min(d2, axis=1))
+    return new_centers, assign, sse
+
+
+@dataclasses.dataclass
+class KMeans:
+    k: int
+    n_iter: int = 100
+    tol: float = 1e-9
+    random_state: int = 0
+
+    centers_: np.ndarray | None = None
+    labels_: np.ndarray | None = None
+    sse_: float = np.inf
+    _mean: np.ndarray | None = None
+    _std: np.ndarray | None = None
+
+    # ------------------------------------------------------------------ #
+    def _kpp_init(self, X: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+        n = X.shape[0]
+        centers = [X[rng.integers(n)]]
+        for _ in range(1, self.k):
+            d2 = np.min(
+                ((X[:, None, :] - np.stack(centers)[None, :, :]) ** 2).sum(-1),
+                axis=1,
+            )
+            tot = d2.sum()
+            if tot <= 0:
+                centers.append(X[rng.integers(n)])
+                continue
+            probs = d2 / tot
+            centers.append(X[rng.choice(n, p=probs)])
+        return np.stack(centers)
+
+    def fit(self, X: np.ndarray) -> "KMeans":
+        X = np.asarray(X, dtype=np.float64)
+        self._mean = X.mean(axis=0)
+        std = X.std(axis=0)
+        self._std = np.where(std < 1e-12, 1.0, std)
+        Xs = (X - self._mean) / self._std
+        rng = np.random.default_rng(self.random_state)
+        centers = self._kpp_init(Xs, rng)
+        Xj = jnp.asarray(Xs)
+        prev = np.inf
+        for _ in range(self.n_iter):
+            centers_j, assign, sse = _lloyd_step(Xj, jnp.asarray(centers), self.k)
+            centers = np.asarray(centers_j)
+            sse = float(sse)
+            if abs(prev - sse) < self.tol:
+                break
+            prev = sse
+        self.centers_ = centers
+        self.labels_ = np.asarray(assign)
+        self.sse_ = sse
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, dtype=np.float64)
+        Xs = (X - self._mean) / self._std
+        d2 = ((Xs[:, None, :] - self.centers_[None, :, :]) ** 2).sum(-1)
+        return np.argmin(d2, axis=1)
+
+
+def elbow_sse(X: np.ndarray, ks, random_state: int = 0) -> dict[int, float]:
+    """Weighted-SSE per k (the paper's elbow criterion for k = 5)."""
+    out = {}
+    for k in ks:
+        km = KMeans(k=k, random_state=random_state).fit(X)
+        out[int(k)] = float(km.sse_)
+    return out
+
+
+def choose_k_elbow(X: np.ndarray, k_max: int = 8, random_state: int = 0) -> int:
+    """Pick k at the maximum-curvature point of the SSE curve."""
+    ks = list(range(1, min(k_max, len(X)) + 1))
+    sse = elbow_sse(X, ks, random_state)
+    vals = np.array([sse[k] for k in ks])
+    if len(ks) <= 2:
+        return ks[-1]
+    # "knee" = k where the decrease before it dwarfs the decrease after it
+    drops = np.maximum(vals[:-1] - vals[1:], 0.0)          # drop going k → k+1
+    eps = 1e-9 * (vals[0] + 1.0)
+    ratios = drops[:-1] / (drops[1:] + eps)                # at interior k
+    return ks[int(np.argmax(ratios)) + 1]

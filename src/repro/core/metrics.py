@@ -1,0 +1,26 @@
+"""Shared evaluation metrics (paper Eq. 2)."""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["rmse", "mape", "r2"]
+
+
+def rmse(y_true, y_pred) -> float:
+    y_true = np.asarray(y_true, dtype=np.float64)
+    y_pred = np.asarray(y_pred, dtype=np.float64)
+    return float(np.sqrt(np.mean((y_true - y_pred) ** 2)))
+
+
+def mape(y_true, y_pred, eps: float = 1e-12) -> float:
+    y_true = np.asarray(y_true, dtype=np.float64)
+    y_pred = np.asarray(y_pred, dtype=np.float64)
+    return float(np.mean(np.abs((y_true - y_pred) / (np.abs(y_true) + eps))))
+
+
+def r2(y_true, y_pred) -> float:
+    y_true = np.asarray(y_true, dtype=np.float64)
+    y_pred = np.asarray(y_pred, dtype=np.float64)
+    ss_res = np.sum((y_true - y_pred) ** 2)
+    ss_tot = np.sum((y_true - y_true.mean()) ** 2)
+    return float(1.0 - ss_res / (ss_tot + 1e-30))

@@ -1,0 +1,219 @@
+"""Energy/time prediction models (paper §III-B) + LOOCV harness.
+
+Two regressors per the paper: **power** (W, raw scale) and **execution time**
+(log10 seconds internally — our workloads span ms…minutes, 5 orders of
+magnitude wider than the paper's 12 kernels; predictions are exponentiated
+back, and reported RMSEs are computed in *normalized* units, see
+:func:`normalized_rmse`, so model comparisons mirror the paper's Fig. 3).
+
+Model zoo mirrors the paper's candidates: LR, Lasso, SVR (linear), plus the
+gradient-boosting family (our from-scratch oblivious-tree GBDT standing in
+for both XGBoost and CatBoost; with ordered-target-statistics categorical
+handling enabled it is the CatBoost configuration, without it the XGBoost
+configuration).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional, Sequence
+
+import numpy as np
+
+from .features import ALL_INPUT_NAMES, CATEGORICAL_FEATURES
+from .gbdt import GBDTModel, GBDTParams, OrderedTargetEncoder, fit_gbdt
+from .linear import Lasso, LinearRegression, LinearSVR, Ridge
+from .metrics import rmse
+
+__all__ = [
+    "PredictorConfig",
+    "EnergyTimePredictor",
+    "loocv_rmse",
+    "normalized_rmse",
+]
+
+ModelName = Literal["catboost", "xgboost", "lr", "lasso", "svr", "ridge"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictorConfig:
+    model: ModelName = "catboost"
+    gbdt: GBDTParams = GBDTParams(iterations=400, depth=4, learning_rate=0.1,
+                                  l2_leaf_reg=5.0)
+    gbdt_time: GBDTParams = GBDTParams(iterations=400, depth=4,
+                                       learning_rate=0.1, l2_leaf_reg=3.0)
+    log_time: bool = True
+    lasso_alpha: float = 0.01
+    ridge_alpha: float = 1.0
+    # Predict targets as ratios to the measured default-clock run (then
+    # rescale by that anchor at inference). Decision trees partition feature
+    # space and cannot extrapolate the absolute scale of an *unseen*
+    # application; ratios are bounded and transfer across applications. The
+    # paper's 12 kernels share a narrow time range so raw targets worked
+    # there; our workloads span ms…minutes. Set both False for the
+    # paper-literal configuration (kept for the Fig. 3 ablation).
+    ratio_time: bool = True
+    ratio_power: bool = True
+
+
+def _make_model(name: ModelName, cfg: PredictorConfig, which: str):
+    if name in ("catboost", "xgboost"):
+        return None  # handled specially (needs cat encoding / params)
+    if name == "lr":
+        return LinearRegression()
+    if name == "lasso":
+        return Lasso(alpha=cfg.lasso_alpha)
+    if name == "ridge":
+        return Ridge(alpha=cfg.ridge_alpha)
+    if name == "svr":
+        return LinearSVR()
+    raise ValueError(name)
+
+
+_TIME_ANCHOR = ALL_INPUT_NAMES.index("time_default_log")    # log10 seconds
+_POWER_ANCHOR = ALL_INPUT_NAMES.index("power_default")      # watts
+
+
+class _SingleTarget:
+    """One fitted regressor: optional categorical encoding, log/ratio target."""
+
+    def __init__(self, cfg: PredictorConfig, which: str):
+        self.cfg = cfg
+        self.which = which  # "power" | "time"
+        self.log = cfg.log_time and which == "time"
+        self.ratio = cfg.ratio_time if which == "time" else cfg.ratio_power
+        self.enc: Optional[OrderedTargetEncoder] = None
+        self.model = None
+        self.gbdt: Optional[GBDTModel] = None
+
+    def _encode_target(self, X: np.ndarray, y: np.ndarray) -> np.ndarray:
+        if self.which == "time":
+            yt = np.log10(np.maximum(y, 1e-9)) if self.log else y
+            if self.ratio:
+                yt = yt - X[:, _TIME_ANCHOR] if self.log else (
+                    yt / np.power(10.0, X[:, _TIME_ANCHOR]))
+            return yt
+        yt = y
+        if self.ratio:
+            yt = yt / np.maximum(X[:, _POWER_ANCHOR], 1e-9)
+        return yt
+
+    def _decode_target(self, X: np.ndarray, out: np.ndarray) -> np.ndarray:
+        if self.which == "time":
+            if self.log:
+                if self.ratio:
+                    out = out + X[:, _TIME_ANCHOR]
+                return np.power(10.0, out)
+            return out * np.power(10.0, X[:, _TIME_ANCHOR]) if self.ratio else out
+        return out * X[:, _POWER_ANCHOR] if self.ratio else out
+
+    def fit(self, X: np.ndarray, y: np.ndarray,
+            cat_cols: Sequence[int] = CATEGORICAL_FEATURES,
+            feature_names: Sequence[str] = ALL_INPUT_NAMES):
+        yt = self._encode_target(X, y)
+        name = self.cfg.model
+        if name == "catboost":
+            self.enc = OrderedTargetEncoder(random_state=0)
+            Xe = self.enc.fit_transform(X, yt, cat_cols)
+            params = self.cfg.gbdt_time if self.which == "time" else self.cfg.gbdt
+            self.gbdt = fit_gbdt(Xe, yt, params, feature_names=feature_names)
+        elif name == "xgboost":
+            # same boosting core, raw categorical codes (no ordered TS)
+            params = self.cfg.gbdt_time if self.which == "time" else self.cfg.gbdt
+            self.gbdt = fit_gbdt(X, yt, params, feature_names=feature_names)
+        else:
+            self.model = _make_model(name, self.cfg, self.which).fit(X, yt)
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        if self.gbdt is not None:
+            Xe = self.enc.transform(X) if self.enc is not None else X
+            out = self.gbdt.predict(Xe)
+        else:
+            out = self.model.predict(X)
+        return self._decode_target(X, out)
+
+
+class EnergyTimePredictor:
+    """The paper's two prediction models behind one interface."""
+
+    def __init__(self, cfg: PredictorConfig = PredictorConfig()):
+        self.cfg = cfg
+        self.power = _SingleTarget(cfg, "power")
+        self.time = _SingleTarget(cfg, "time")
+
+    def fit(self, X, y_power, y_time, cat_cols=CATEGORICAL_FEATURES):
+        self.power.fit(X, y_power, cat_cols)
+        self.time.fit(X, y_time, cat_cols)
+        return self
+
+    def predict_power(self, X) -> np.ndarray:
+        return self.power.predict(np.atleast_2d(X))
+
+    def predict_time(self, X) -> np.ndarray:
+        return self.time.predict(np.atleast_2d(X))
+
+    def predict_energy(self, X) -> np.ndarray:
+        return self.predict_power(X) * self.predict_time(X)
+
+
+# ---------------------------------------------------------------------- #
+#  Evaluation harnesses
+# ---------------------------------------------------------------------- #
+def normalized_rmse(y_true, y_pred) -> float:
+    """RMSE / std(y_true): unit-free, comparable across power & time models
+    (the paper's 0.38 / 0.05 are raw-unit; we report normalized + raw)."""
+    s = float(np.std(np.asarray(y_true, dtype=np.float64)))
+    return rmse(y_true, y_pred) / (s + 1e-12)
+
+
+def split_rmse(
+    X: np.ndarray,
+    y_power: np.ndarray,
+    y_time: np.ndarray,
+    cfg: PredictorConfig = PredictorConfig(),
+    test_frac: float = 0.30,
+    seed: int = 0,
+) -> dict:
+    """70/30 random-split evaluation — the paper's §III-B headline protocol
+    (all apps appear in both sides; rows differ by clock pair)."""
+    n = X.shape[0]
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n)
+    n_test = int(round(test_frac * n))
+    te, tr = order[:n_test], order[n_test:]
+    pred = EnergyTimePredictor(cfg).fit(X[tr], y_power[tr], y_time[tr])
+    pp = pred.predict_power(X[te])
+    pt = pred.predict_time(X[te])
+    y_e = y_power * y_time
+    pe = pp * pt
+    return {
+        "power": rmse(y_power[te], pp),
+        "time": rmse(y_time[te], pt),
+        "energy": rmse(y_e[te], pe),
+        "power_norm": normalized_rmse(y_power[te], pp),
+        "time_norm": normalized_rmse(y_time[te], pt),
+        "energy_norm": normalized_rmse(y_e[te], pe),
+    }
+
+
+def loocv_rmse(
+    X: np.ndarray,
+    y_power: np.ndarray,
+    y_time: np.ndarray,
+    groups: np.ndarray,
+    cfg: PredictorConfig = PredictorConfig(),
+) -> dict:
+    """Leave-one-application-out CV (paper §III-B: 'we exclude the data from a
+    particular application in training and evaluate with the excluded
+    application's test data')."""
+    out = {"power": [], "time": [], "power_norm": [], "time_norm": []}
+    for g in np.unique(groups):
+        tr, te = groups != g, groups == g
+        pred = EnergyTimePredictor(cfg).fit(X[tr], y_power[tr], y_time[tr])
+        pp = pred.predict_power(X[te])
+        pt = pred.predict_time(X[te])
+        out["power"].append(rmse(y_power[te], pp))
+        out["time"].append(rmse(y_time[te], pt))
+        out["power_norm"].append(normalized_rmse(y_power[te], pp))
+        out["time_norm"].append(normalized_rmse(y_time[te], pt))
+    return {k: float(np.mean(v)) for k, v in out.items()}

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels (validated via interpret=True on CPU) + jnp oracles."""

@@ -1,0 +1,133 @@
+"""Pallas TPU flash attention: causal + sliding-window + GQA.
+
+TPU adaptation of the FlashAttention algorithm (DESIGN.md: rethink
+tiling/blocking for VMEM + MXU rather than porting CUDA warp structure):
+
+* grid = (batch*heads, q_blocks, k_blocks), k innermost — on TPU the last
+  grid dim executes sequentially per core, so the online-softmax running
+  state (m, l, acc) lives in VMEM scratch that persists across k steps.
+* BlockSpec tiles: q (1, BQ, hd), k/v (1, BK, hd) staged HBM→VMEM by the
+  pipeline; the two matmuls (q·kᵀ and p·v) hit the MXU with BQ=BK=128
+  (systolic-array aligned; hd is padded to a lane multiple by ops.py).
+* GQA without materializing repeated kv heads: the k/v BlockSpec index_map
+  divides the head index by the group size, so kv tiles are re-streamed per
+  q-head group — zero HBM duplication.
+* causal + window masks are computed from iota against the absolute block
+  offsets; fully-masked k blocks short-circuit via pl.when (no MXU work).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+BQ = 128
+BK = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window, sq: int, sk: int,
+            n_kb: int, bq: int, bk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # absolute positions of this block's rows/cols (right-aligned queries)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + (sk - sq)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    mask = k_pos < sk  # padded keys
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+
+    # short-circuit fully-masked blocks (beyond causal frontier / window)
+    block_live = jnp.any(mask)
+
+    @pl.when(block_live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                   # (BQ, hd)
+        k = k_ref[0].astype(jnp.float32)                   # (BK, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # (BQ, BK)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                                # (BQ, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                             # (BQ, BK)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                    # (BQ, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kb - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "interpret", "bq", "bk"))
+def flash_attention(q, k, v, causal: bool = True, window=None,
+                    interpret: bool = False, bq: int = BQ, bk: int = BK):
+    """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Sk, hd) — hd and S pre-padded by
+    ops.py; sq/sk are the *logical* lengths carried via static closure.
+    """
+    B, Hq, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(hd)
+    n_qb = Sq // bq
+    n_kb = Sk // bk
+
+    qr = q.reshape(B * Hq, Sq, hd)
+    kr = k.reshape(B * Hkv, Sk, hd)
+    vr = v.reshape(B * Hkv, Sk, hd)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        b, h = bh // Hq, (bh % Hq) // G
+        return (b * Hkv + h, ki, 0)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        sq=Sq, sk=Sk, n_kb=n_kb, bq=bq, bk=bk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), q_map),
+            pl.BlockSpec((1, bk, hd), kv_map),
+            pl.BlockSpec((1, bk, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),   # acc
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom l
+        ],
+        interpret=interpret,
+    )
+    return out(qr, kr, vr).reshape(B, Hq, Sq, hd)

@@ -1,0 +1,96 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles: layout conversion from model-space, padding to kernel tile
+multiples, CPU fallback (interpret=True — this container has no TPU; the
+kernel body executes in the Pallas interpreter for correctness validation,
+see tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import flash_attention as _fa
+from . import gbdt_predict as _gp
+from . import mamba_scan as _ms
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis: int, mult: int, value=0.0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------- #
+def flash_attention(q, k, v, causal: bool = True, window=None,
+                    bq: int = None, bk: int = None):
+    """Model-space layout q: (B, S, Hq, hd), k/v: (B, S, Hkv, hd).
+    Returns (B, S, Hq, hd)."""
+    B, Sq, Hq, hd = q.shape
+    Sk = k.shape[1]
+    bq = bq or min(_fa.BQ, max(Sq, 8))
+    bk = bk or min(_fa.BK, max(Sk, 8))
+    qt = _pad_to(jnp.swapaxes(q, 1, 2), 2, bq)           # (B, Hq, Sq', hd)
+    kt = _pad_to(jnp.swapaxes(k, 1, 2), 2, bk)
+    vt = _pad_to(jnp.swapaxes(v, 1, 2), 2, bk)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              interpret=_INTERPRET, bq=bq, bk=bk)
+    return jnp.swapaxes(out[:, :, :Sq], 1, 2)
+
+
+def mamba_scan(u, dt, A, Bm, Cm, D, chunk: int = None, bd: int = None):
+    """Selective scan; shapes as ref.mamba_scan_ref. Returns (y, h_last)."""
+    B, L, Di = u.shape
+    chunk = chunk or min(_ms.CHUNK, L)
+    bd = bd or min(_ms.BD, Di)
+    Lp = L + ((-L) % chunk)
+    up = _pad_to(u, 1, chunk)
+    dtp = _pad_to(dt, 1, chunk)
+    Bp = _pad_to(Bm, 1, chunk)
+    Cp = _pad_to(Cm, 1, chunk)
+    up = _pad_to(up, 2, bd)
+    dtp = _pad_to(dtp, 2, bd)
+    Ap = _pad_to(A, 0, bd, value=-1.0)
+    Dp = _pad_to(D, 0, bd)
+    y = _ms.mamba_scan(up, dtp, Ap, Bp, Cp, Dp, interpret=_INTERPRET,
+                       chunk=chunk, bd=bd)
+    y = y[:, :L, :Di]
+    h_last = _ms.final_state(u, dt, A, Bm, Cm)
+    return y, h_last
+
+
+def gbdt_predict(X, feats, thresholds, leaves, base: float = 0.0,
+                 bn: int = None, bt: int = None):
+    """numpy/jnp inputs in GBDTModel layout: X (n, F), feats (T, D) int,
+    thresholds (T, D), leaves (T, 2**D). Returns (n,) fp32."""
+    X = jnp.asarray(X, jnp.float32)
+    feats = jnp.asarray(feats, jnp.int32)
+    thresholds = jnp.asarray(thresholds, jnp.float32)
+    leaves = jnp.asarray(leaves, jnp.float32)
+    n, F = X.shape
+    T, depth = feats.shape
+    bn = bn or min(_gp.BN, max(n, 8))
+    bt = bt or min(_gp.BT, max(T, 8))
+    Xp = _pad_to(X, 0, bn)
+    featsp = _pad_to(feats, 0, bt)
+    # padded trees: +inf thresholds => all bits 0 => leaf 0; zero leaves
+    thrp = _pad_to(thresholds, 0, bt, value=np.float32(np.inf))
+    leavesp = _pad_to(leaves, 0, bt)
+    onehot = jax.nn.one_hot(featsp, F, dtype=jnp.float32)  # (T', D, F)
+    out = _gp.gbdt_predict(Xp, onehot, thrp, leavesp, jnp.float32(base),
+                           interpret=_INTERPRET, bn=bn, bt=bt)
+    return out[:n]
+
+
+def gbdt_predict_model(model, X):
+    """Convenience: run a fitted core.gbdt.GBDTModel through the kernel."""
+    return np.asarray(gbdt_predict(X, model.feats, model.thresholds,
+                                   model.leaves, model.base))

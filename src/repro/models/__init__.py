@@ -1,0 +1,2 @@
+"""Model zoo: pure-JAX functional definitions of the assigned architectures."""
+from . import model

@@ -1,0 +1,238 @@
+"""GQA attention with RoPE, optional QKV bias, sliding window, KV cache.
+
+Layouts:
+  q:  (B, S, Hq, hd)    k/v: (B, S, Hkv, hd)
+  KV cache (decode): k/v (B, Hkv, S_max, hd), updated in place at ``pos``.
+
+TP: heads sharded over the ``model`` axis; FSDP: the d_model dim of every
+projection sharded over ``data``. With Hkv < TP degree the kv projections
+shard their *head_dim* product dim instead (spec falls back to replicated kv
+heads — XLA resolves the einsum; for the assigned configs Hkv ∈ {5, 8, 20,
+32} vs TP = 16, so kv head sharding applies only when divisible).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .common import FSDP, TP, apply_rope, dense_init, dtype_of, maybe_shard
+
+NEG_INF = -2.0 ** 30  # large-negative in fp32/bf16 without overflow
+
+
+def _tp_size() -> int:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is not None and TP in getattr(mesh, "shape", {}):
+        return mesh.shape[TP]
+    return 1
+
+
+def init_attention(key, cfg):
+    dt = dtype_of(cfg.param_dtype)
+    D, hd = cfg.d_model, cfg.resolved_head_dim
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, Hq * hd), dt),
+        "wk": dense_init(ks[1], (D, Hkv * hd), dt),
+        "wv": dense_init(ks[2], (D, Hkv * hd), dt),
+        "wo": dense_init(ks[3], (Hq * hd, D), dt, fan_in=Hq * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * hd,), dt)
+        p["bk"] = jnp.zeros((Hkv * hd,), dt)
+        p["bv"] = jnp.zeros((Hkv * hd,), dt)
+    return p
+
+
+def spec_attention(cfg):
+    kv_tp = TP if cfg.n_kv_heads % 16 == 0 else None
+    p = {
+        "wq": P(FSDP, TP),
+        "wk": P(FSDP, kv_tp),
+        "wv": P(FSDP, kv_tp),
+        "wo": P(TP, FSDP),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P(TP)
+        p["bk"] = P(kv_tp)
+        p["bv"] = P(kv_tp)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions):
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if positions is not None:  # rope off for whisper-style learned/sinusoid
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """Grouped scaled-dot-product attention. q:(B,Sq,Hq,hd) k/v:(B,Sk,K,hd).
+
+    mask: broadcastable to (B, 1|G..., Sq, Sk) boolean (True = attend) or None.
+
+    **Key-sequence parallelism**: the (Sq x Sk) score tensor is sharded over
+    TP on the *key* dim. No assigned config's kv-head count divides TP=16
+    (kv ∈ {5, 8, 20, 32} aside from 32), so head-TP cannot shard scores;
+    key-SP works for every arch and costs one small logsumexp all-reduce plus
+    a partial-sum all-reduce on the output (DESIGN.md §3 SP).
+    """
+    B, Sq, Hq, hd = q.shape
+    K = k.shape[2]
+    G = Hq // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    dp = ("pod", FSDP)
+    k = maybe_shard(k, P(dp, TP, None, None))
+    v = maybe_shard(v, P(dp, TP, None, None))
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(hd)
+    scores = maybe_shard(scores, P(dp, None, None, None, TP))
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)  # AR over TP
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v,
+                     preferred_element_type=jnp.float32)     # AR over TP
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, cfg, chunk: int = 2048):
+    """Query-chunked causal attention: lax.scan over q blocks bounds the
+    live score tensor to (B, K, G, chunk, Sk) — the XLA-path equivalent of
+    flash attention's memory behavior (the Pallas kernel is the TPU hot
+    path; this keeps the fallback — and the dry-run's memory proof — sane
+    at 32k+ sequae). Sliding windows are honored inside the mask."""
+    B, Sq, Hq, hd = q.shape
+    K = k.shape[2]
+    G = Hq // K
+    n_chunks = Sq // chunk
+    dp = ("pod", FSDP)
+    k = maybe_shard(k, P(dp, TP, None, None))
+    v = maybe_shard(v, P(dp, TP, None, None))
+    qg = q.reshape(B, n_chunks, chunk, K, G, hd)
+    qg = jnp.moveaxis(qg, 1, 0)                       # (C, B, chunk, K, G, hd)
+
+    kj = jnp.arange(k.shape[1])
+
+    def one(ci, q_chunk):
+        qi = ci * chunk + jnp.arange(chunk)
+        mask = kj[None, :] <= qi[:, None]
+        if cfg.sliding_window is not None:
+            mask = mask & (kj[None, :] > qi[:, None] - cfg.sliding_window)
+        scores = jnp.einsum("bskgh,btkh->bkgst", q_chunk, k,
+                            preferred_element_type=jnp.float32)
+        scores = scores / np.sqrt(hd)
+        scores = maybe_shard(scores, P(dp, None, None, None, TP))
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgst,btkh->bskgh", probs, v,
+                         preferred_element_type=jnp.float32)
+        return out.astype(q.dtype)
+
+    def body(_, inp):
+        ci, q_chunk = inp
+        return None, one(ci, q_chunk)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n_chunks), qg))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, K, G, hd)
+    return out.reshape(B, Sq, Hq, hd)
+
+
+def causal_mask(Sq: int, Sk: int, window=None, offset: int = 0):
+    """(1, Sq, Sk) boolean: query i attends key j iff j ≤ i+offset, and
+    within the sliding window when set."""
+    qi = jnp.arange(Sq)[:, None] + offset
+    kj = jnp.arange(Sk)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m = m & (kj > qi - window)
+    return m[None]
+
+
+def attention(p, x, cfg, positions=None, mask=None, impl=None):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    impl = impl or cfg.attn_impl
+    if impl == "flash":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(
+            q, k, v, causal=True, window=cfg.sliding_window)
+    elif mask is None and S >= 8192 and S % 2048 == 0:
+        out = _sdpa_chunked(q, k, v, cfg)
+    else:
+        if mask is None:
+            mask = causal_mask(S, S, cfg.sliding_window)
+        out = _sdpa(q, k, v, mask, cfg)
+    out = out.reshape(B, S, cfg.n_heads * cfg.resolved_head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype)), (k, v)
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, cfg):
+    """Single-token decode with KV cache.
+
+    x: (B, 1, D); cache_k/v: (B, Hkv, S_max, hd); pos: scalar int32 (current
+    write index — same for every sequence in the batch).
+    Returns (out (B,1,D), new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    # write new kv at pos:  (B, 1, K, hd) -> (B, K, 1, hd)
+    k_t = jnp.swapaxes(k, 1, 2)
+    v_t = jnp.swapaxes(v, 1, 2)
+    S_max = cache_k.shape[2]
+    # ring-buffer mode: sliding-window archs allocate a window-sized cache
+    # (keys carry RoPE at absolute positions, so slots may rotate freely) —
+    # this is what makes long_500k decode O(window) instead of O(context)
+    ring = cfg.sliding_window is not None and S_max <= cfg.sliding_window
+    write_idx = pos % S_max if ring else pos
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k_t.astype(cache_k.dtype), (0, 0, write_idx, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v_t.astype(cache_v.dtype), (0, 0, write_idx, 0))
+    kj = jnp.arange(S_max)
+    if ring:
+        valid = (kj <= pos) | (pos >= S_max)  # warmup, then all slots live
+    else:
+        valid = kj <= pos
+        if cfg.sliding_window is not None:
+            valid = valid & (kj > pos - cfg.sliding_window)
+    # scores over the whole cache (flash-decode pattern: seq dim TP-sharded).
+    # Einsums run directly against the native (B, K, S, hd) cache layout —
+    # a transposed/retyped copy of a multi-GB cache would dominate decode
+    # HBM traffic and temp memory.
+    K = cfg.n_kv_heads
+    G = cfg.n_heads // K
+    qg = q.reshape(B, 1, K, G, hd)
+    scores = jnp.einsum("bskgh,bkth->bkgst", qg,
+                        cache_k.astype(q.dtype),
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,bkth->bskgh", probs,
+                     cache_v.astype(q.dtype),
+                     preferred_element_type=jnp.float32)   # AR over TP
+    out = out.astype(x.dtype).reshape(B, 1, cfg.n_heads * hd)
+    return (jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype)),
+            cache_k, cache_v)

@@ -1,0 +1,238 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+Zamba2-7B interleaves 81 Mamba2 blocks with a single shared transformer
+block applied every ``hybrid_attn_period`` layers (weights reused at every
+application; each application has its own KV cache at decode time).
+Simplification vs. the released model (documented in DESIGN.md): the shared
+block consumes the hidden state directly (no concat-with-embedding + LoRA
+per application).
+
+Scan structure: the homogeneous mamba stack is scanned; shared-attention
+applications run between scan segments of ``period`` layers (so HLO stays
+O(n_applications), each a closed-over shared-weight block).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn_mod
+from .common import (FSDP, TP, dtype_of, embed_tokens, init_embeddings,
+                     rms_norm, spec_embeddings, stack_fold, unembed)
+from .mlp import init_mlp, mlp, spec_mlp
+from .ssm import init_mamba, mamba2_block, spec_mamba
+from .transformer import _prepend_none, _stack_layer_params
+
+
+def n_attn_applications(cfg) -> int:
+    return cfg.n_layers // cfg.hybrid_attn_period if cfg.hybrid_attn_period else 0
+
+
+def init_lm(key, cfg):
+    dt = dtype_of(cfg.param_dtype)
+    ke, kl, ka, km = jax.random.split(key, 4)
+    p = {
+        "embed": init_embeddings(ke, cfg),
+        "layers": _stack_layer_params(
+            kl, cfg.n_layers,
+            lambda k: {
+                "norm": jnp.ones((cfg.d_model,), dt),
+                "mamba": init_mamba(k, cfg),
+            }),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if cfg.hybrid_attn_period:
+        p["shared_attn"] = {
+            "attn_norm": jnp.ones((cfg.d_model,), dt),
+            "mlp_norm": jnp.ones((cfg.d_model,), dt),
+            "attn": attn_mod.init_attention(ka, cfg),
+            "mlp": init_mlp(km, cfg),
+        }
+    return p
+
+
+def lm_param_specs(cfg):
+    p = {
+        "embed": spec_embeddings(cfg),
+        "layers": _prepend_none({"norm": P(None), "mamba": spec_mamba(cfg)}),
+        "final_norm": P(None),
+    }
+    if cfg.hybrid_attn_period:
+        p["shared_attn"] = {
+            "attn_norm": P(None),
+            "mlp_norm": P(None),
+            "attn": attn_mod.spec_attention(cfg),
+            "mlp": spec_mlp(),
+        }
+    return p
+
+
+def _shared_attn_fwd(sp, x, cfg, mask=None):
+    h, kv = attn_mod.attention(
+        sp["attn"], rms_norm(x, sp["attn_norm"], cfg.norm_eps), cfg,
+        mask=mask)
+    x = x + h
+    x = x + mlp(sp["mlp"], rms_norm(x, sp["mlp_norm"], cfg.norm_eps))
+    return x, kv
+
+
+def _mamba_segment(params_seg, x, cfg):
+    def body(x, lp):
+        h, _ = mamba2_block(lp["mamba"],
+                            rms_norm(x, lp["norm"], cfg.norm_eps), cfg)
+        return x + h, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = stack_fold(body, x, params_seg, cfg.scan_layers)
+    return x
+
+
+def _split_segments(layers, cfg):
+    """Split stacked layer params into per-period segments."""
+    period = cfg.hybrid_attn_period or cfg.n_layers
+    n_apps = n_attn_applications(cfg)
+    segs = []
+    start = 0
+    for i in range(n_apps):
+        segs.append(jax.tree.map(lambda a: a[start:start + period], layers))
+        start += period
+    if start < cfg.n_layers:
+        segs.append(jax.tree.map(lambda a: a[start:], layers))
+    return segs
+
+
+def forward(params, tokens, cfg, vision_embeds=None):
+    x = embed_tokens(params["embed"], tokens, cfg)
+    segs = _split_segments(params["layers"], cfg)
+    n_apps = n_attn_applications(cfg)
+    for i, seg in enumerate(segs):
+        x = _mamba_segment(seg, x, cfg)
+        if i < n_apps and cfg.hybrid_attn_period:
+            x, _ = _shared_attn_fwd(params["shared_attn"], x, cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg).astype(jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------- #
+#  Serving
+# ---------------------------------------------------------------------- #
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    Di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    H = Di // cfg.ssm_head_dim
+    L = cfg.n_layers
+    n_apps = n_attn_applications(cfg)
+    hd = cfg.resolved_head_dim
+    cache = {
+        "conv": jnp.zeros((L, batch, K - 1, Di + 2 * N), dtype),
+        "ssm": jnp.zeros((L, batch, H, cfg.ssm_head_dim, N), jnp.float32),
+    }
+    if n_apps:
+        cache["attn_k"] = jnp.zeros(
+            (n_apps, batch, cfg.n_kv_heads, max_seq, hd), dtype)
+        cache["attn_v"] = jnp.zeros(
+            (n_apps, batch, cfg.n_kv_heads, max_seq, hd), dtype)
+    return cache
+
+
+def cache_specs(cfg):
+    p = {
+        "conv": P(None, FSDP, None, TP),
+        "ssm": P(None, FSDP, TP, None, None),
+    }
+    if n_attn_applications(cfg):
+        p["attn_k"] = P(None, FSDP, None, TP, None)
+        p["attn_v"] = P(None, FSDP, None, TP, None)
+    return p
+
+
+def prefill(params, tokens, cfg, max_seq: int, vision_embeds=None,
+            cache_dtype=jnp.bfloat16):
+    x = embed_tokens(params["embed"], tokens, cfg)
+    segs = _split_segments(params["layers"], cfg)
+    n_apps = n_attn_applications(cfg)
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_seq, cache_dtype)
+    new_conv, new_ssm, new_k, new_v = [], [], [], []
+
+    def seg_prefill(x, seg):
+        def body(x, lp):
+            h, st = mamba2_block(
+                lp["mamba"], rms_norm(x, lp["norm"], cfg.norm_eps), cfg)
+            return x + h, st
+        return stack_fold(body, x, seg, cfg.scan_layers)
+
+    for i, seg in enumerate(segs):
+        x, st = seg_prefill(x, seg)
+        new_conv.append(st["conv"])
+        new_ssm.append(st["ssm"])
+        if i < n_apps:
+            x, (k, v) = _shared_attn_fwd(params["shared_attn"], x, cfg)
+            new_k.append(jnp.swapaxes(k, 1, 2))  # (B, K, S, hd)
+            new_v.append(jnp.swapaxes(v, 1, 2))
+
+    cache["conv"] = jnp.concatenate(new_conv, axis=0).astype(cache_dtype)
+    cache["ssm"] = jnp.concatenate(new_ssm, axis=0)
+    if n_apps:
+        cache["attn_k"] = jax.lax.dynamic_update_slice(
+            cache["attn_k"], jnp.stack(new_k).astype(cache_dtype),
+            (0, 0, 0, 0, 0))
+        cache["attn_v"] = jax.lax.dynamic_update_slice(
+            cache["attn_v"], jnp.stack(new_v).astype(cache_dtype),
+            (0, 0, 0, 0, 0))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg):
+    x = embed_tokens(params["embed"], tokens, cfg)
+    segs = _split_segments(params["layers"], cfg)
+    n_apps = n_attn_applications(cfg)
+    period = cfg.hybrid_attn_period or cfg.n_layers
+
+    new_conv, new_ssm = [], []
+    new_k, new_v = [], []
+
+    def seg_decode(x, seg, conv_seg, ssm_seg):
+        def body(x, inp):
+            lp, conv, ssm = inp
+            h, st = mamba2_block(
+                lp["mamba"], rms_norm(x, lp["norm"], cfg.norm_eps), cfg,
+                state={"conv": conv.astype(x.dtype), "ssm": ssm})
+            return x + h, (st["conv"], st["ssm"])
+        x, (convs, ssms) = stack_fold(body, x, (seg, conv_seg, ssm_seg),
+                                      cfg.scan_layers)
+        return x, convs, ssms
+
+    start = 0
+    for i, seg in enumerate(segs):
+        n_seg = jax.tree.leaves(seg)[0].shape[0]
+        conv_seg = cache["conv"][start:start + n_seg]
+        ssm_seg = cache["ssm"][start:start + n_seg]
+        x, convs, ssms = seg_decode(x, seg, conv_seg, ssm_seg)
+        new_conv.append(convs)
+        new_ssm.append(ssms)
+        start += n_seg
+        if i < n_apps:
+            sp = params["shared_attn"]
+            h, ck, cv = attn_mod.attention_decode(
+                sp["attn"], rms_norm(x, sp["attn_norm"], cfg.norm_eps),
+                cache["attn_k"][i], cache["attn_v"][i], pos, cfg)
+            x = x + h
+            x = x + mlp(sp["mlp"], rms_norm(x, sp["mlp_norm"], cfg.norm_eps))
+            new_k.append(ck)
+            new_v.append(cv)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg).astype(jnp.float32)
+    out = {
+        "conv": jnp.concatenate(new_conv, axis=0).astype(cache["conv"].dtype),
+        "ssm": jnp.concatenate(new_ssm, axis=0),
+    }
+    if n_apps:
+        out["attn_k"] = jnp.stack(new_k)
+        out["attn_v"] = jnp.stack(new_v)
+    return logits, out

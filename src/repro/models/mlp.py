@@ -1,0 +1,46 @@
+"""SwiGLU / GELU MLP blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import FSDP, TP, dense_init, dtype_of
+
+
+def init_mlp(key, cfg, d_ff=None, gelu: bool = False):
+    dt = dtype_of(cfg.param_dtype)
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if gelu:  # whisper-style 2-matrix GELU MLP
+        return {
+            "w_in": dense_init(ks[0], (D, F), dt),
+            "w_out": dense_init(ks[1], (F, D), dt, fan_in=F),
+        }
+    return {
+        "w_gate": dense_init(ks[0], (D, F), dt),
+        "w_up": dense_init(ks[1], (D, F), dt),
+        "w_down": dense_init(ks[2], (F, D), dt, fan_in=F),
+    }
+
+
+def spec_mlp(gelu: bool = False):
+    if gelu:
+        return {"w_in": P(FSDP, TP), "w_out": P(TP, FSDP)}
+    return {
+        "w_gate": P(FSDP, TP),
+        "w_up": P(FSDP, TP),
+        "w_down": P(TP, FSDP),
+    }
+
+
+def mlp(p, x):
+    if "w_in" in p:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(x.dtype))
+        h = jax.nn.gelu(h)
+        return jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(x.dtype))
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))

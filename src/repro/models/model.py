@@ -1,0 +1,107 @@
+"""Model dispatcher: one uniform API over every architecture family.
+
+API (all functions take cfg explicitly; params are plain pytrees):
+
+  init(cfg, rng)                                  → params
+  forward(cfg, params, tokens, extra)             → (logits, aux_loss)
+  prefill(cfg, params, tokens, max_seq, extra)    → (logits, cache)
+  decode_step(cfg, params, cache, tokens, pos)    → (logits, cache)
+  init_cache(cfg, batch, max_seq)                 → cache
+  param_specs(cfg) / cache_specs(cfg)             → PartitionSpec trees
+  extra_inputs(cfg, batch, seq, mode)             → dict of modality stubs
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, hybrid, ssm_lm, transformer
+from .common import dtype_of
+
+
+def _family_module(cfg):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer
+    if cfg.family == "ssm":
+        return ssm_lm
+    if cfg.family == "hybrid":
+        return hybrid
+    if cfg.family == "audio":
+        return encdec
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def init(cfg, rng) -> Any:
+    return _family_module(cfg).init_lm(rng, cfg)
+
+
+def param_specs(cfg):
+    return _family_module(cfg).lm_param_specs(cfg)
+
+
+def cache_specs(cfg):
+    return _family_module(cfg).cache_specs(cfg)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    return _family_module(cfg).init_cache(cfg, batch, max_seq, dtype)
+
+
+# ---------------------------------------------------------------------- #
+#  Modality stubs (the assignment: frontend = stub embeddings)
+# ---------------------------------------------------------------------- #
+def extra_inputs(cfg, batch: int, seq: int, mode: str = "train",
+                 rng: Optional[jax.Array] = None) -> dict:
+    """Concrete stub tensors for the modality frontends (smoke/examples)."""
+    dt = dtype_of(cfg.activation_dtype)
+    out = {}
+    if cfg.family == "vlm":
+        shape = (batch, cfg.vision_tokens, cfg.d_model)
+        out["vision_embeds"] = (
+            jax.random.normal(rng, shape).astype(dt) if rng is not None
+            else jnp.zeros(shape, dt))
+    if cfg.family == "audio" and mode in ("train", "prefill"):
+        shape = (batch, cfg.encoder_seq, cfg.d_model)
+        out["frames"] = (
+            jax.random.normal(rng, shape).astype(dt) if rng is not None
+            else jnp.zeros(shape, dt))
+    return out
+
+
+def text_len(cfg, seq: int) -> int:
+    """Text-token count so total decoder sequence == seq for VLM."""
+    if cfg.family == "vlm":
+        return seq - cfg.vision_tokens
+    return seq
+
+
+def forward(cfg, params, tokens, extra: Optional[dict] = None):
+    extra = extra or {}
+    mod = _family_module(cfg)
+    if cfg.family == "audio":
+        return mod.forward(params, tokens, cfg, frames=extra.get("frames"))
+    if cfg.family == "vlm":
+        return mod.forward(params, tokens, cfg,
+                           vision_embeds=extra.get("vision_embeds"))
+    return mod.forward(params, tokens, cfg)
+
+
+def prefill(cfg, params, tokens, max_seq: int, extra: Optional[dict] = None,
+            cache_dtype=jnp.bfloat16):
+    extra = extra or {}
+    mod = _family_module(cfg)
+    if cfg.family == "audio":
+        return mod.prefill(params, tokens, cfg, max_seq,
+                           frames=extra.get("frames"),
+                           cache_dtype=cache_dtype)
+    if cfg.family == "vlm":
+        return mod.prefill(params, tokens, cfg, max_seq,
+                           vision_embeds=extra.get("vision_embeds"),
+                           cache_dtype=cache_dtype)
+    return mod.prefill(params, tokens, cfg, max_seq, cache_dtype=cache_dtype)
+
+
+def decode_step(cfg, params, cache, tokens, pos):
+    return _family_module(cfg).decode_step(params, cache, tokens, pos, cfg)

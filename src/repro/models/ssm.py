@@ -1,0 +1,246 @@
+"""Mamba SSM blocks: Mamba1 (falcon-mamba-7b) and Mamba2 (zamba2-7b).
+
+The sequential selective scan here is the pure-JAX reference path
+(`lax.scan` over time — small HLO, exact); the TPU hot path is the chunked
+Pallas kernel in :mod:`repro.kernels.mamba_scan` (selected via
+``cfg.attn_impl == "flash"`` at the call site, mirroring attention).
+
+Mamba1 recurrence (diagonal A, per-channel state):
+    h_t = exp(dt_t ⊙ A) ⊙ h_{t-1} + (dt_t ⊙ B_t) ⊗ x_t
+    y_t = C_t · h_t + D ⊙ x_t
+Mamba2 (scalar A per head, outer-product state update):
+    h_t = exp(dt_t A_h) h_{t-1} + dt_t · x_t ⊗ B_t ;  y_t = h_t C_t + D_h x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .common import FSDP, TP, dense_init, dtype_of, rms_norm
+
+
+def _dt_rank(cfg) -> int:
+    return max(cfg.d_model // 16, 1)
+
+
+def init_mamba(key, cfg):
+    dt = dtype_of(cfg.param_dtype)
+    D, Di, N, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    if cfg.mamba_version == 1:
+        R = _dt_rank(cfg)
+        A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (Di, N))
+        return {
+            "in_proj": dense_init(ks[0], (D, 2 * Di), dt),
+            "conv_w": dense_init(ks[1], (Di, K), dt, fan_in=K),
+            "conv_b": jnp.zeros((Di,), dt),
+            "x_proj": dense_init(ks[2], (Di, R + 2 * N), dt),
+            "dt_proj": dense_init(ks[3], (R, Di), dt),
+            "dt_bias": jnp.log(jnp.expm1(
+                jnp.clip(jnp.exp(jax.random.uniform(
+                    ks[4], (Di,), minval=np.log(1e-3), maxval=np.log(1e-1))),
+                    1e-4, None))).astype(jnp.float32),
+            "A_log": jnp.log(A),
+            "D": jnp.ones((Di,), jnp.float32),
+            "out_proj": dense_init(ks[5], (Di, D), dt, fan_in=Di),
+        }
+    # --- Mamba2 ---------------------------------------------------------- #
+    H = Di // cfg.ssm_head_dim
+    return {
+        # projects to x (Di), z (Di), B (N), C (N), dt (H)
+        "in_proj": dense_init(ks[0], (D, 2 * Di + 2 * N + H), dt),
+        "conv_w": dense_init(ks[1], (Di + 2 * N, K), dt, fan_in=K),
+        "conv_b": jnp.zeros((Di + 2 * N,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.ones((Di,), dt),
+        "out_proj": dense_init(ks[2], (Di, D), dt, fan_in=Di),
+    }
+
+
+def spec_mamba(cfg):
+    if cfg.mamba_version == 1:
+        return {
+            "in_proj": P(FSDP, TP),
+            "conv_w": P(TP, None),
+            "conv_b": P(TP),
+            "x_proj": P(TP, None),
+            "dt_proj": P(None, TP),
+            "dt_bias": P(TP),
+            "A_log": P(TP, None),
+            "D": P(TP),
+            "out_proj": P(TP, FSDP),
+        }
+    return {
+        "in_proj": P(FSDP, TP),
+        "conv_w": P(TP, None),
+        "conv_b": P(TP),
+        "A_log": P(None),
+        "dt_bias": P(None),
+        "D": P(None),
+        "norm_w": P(TP),
+        "out_proj": P(TP, FSDP),
+    }
+
+
+# ---------------------------------------------------------------------- #
+#  Depthwise causal conv1d
+# ---------------------------------------------------------------------- #
+def causal_conv1d(x, w, b, state=None):
+    """x: (B, L, C); w: (C, K); optional state: (B, K-1, C) prior context.
+    Returns (y (B, L, C), new_state (B, K-1, C))."""
+    B, L, C = x.shape
+    K = w.shape[1]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)            # (B, L+K-1, C)
+    y = jnp.zeros((B, L, C), x.dtype)
+    for i in range(K):  # K is small (4): unrolled shifted adds
+        y = y + xp[:, i:i + L, :] * w[:, i].astype(x.dtype)
+    new_state = xp[:, L:, :] if K > 1 else state
+    return y + b.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------- #
+#  Mamba1 block
+# ---------------------------------------------------------------------- #
+def _chunked_scan(step, h0, inputs, L: int, chunk: int = 256):
+    """scan-of-rematted-scans over time: the naive backward of a length-L
+    scan saves the carry at EVERY step (h is (B, Di, N) fp32 — gigabytes at
+    L = 4k+); checkpointing whole chunks keeps only L/chunk boundary states
+    and recomputes inside the chunk (the XLA-path analogue of the Pallas
+    kernel keeping h in VMEM)."""
+    if L % chunk or L <= chunk:
+        return jax.lax.scan(step, h0, inputs)
+    n_chunks = L // chunk
+    chunked = jax.tree.map(
+        lambda x: x.reshape((n_chunks, chunk) + x.shape[1:]), inputs)
+
+    @jax.checkpoint
+    def chunk_body(h, inp):
+        return jax.lax.scan(step, h, inp)
+
+    h_last, ys = jax.lax.scan(chunk_body, h0, chunked)
+    ys = jax.tree.map(
+        lambda x: x.reshape((L,) + x.shape[2:]), ys)
+    return h_last, ys
+
+
+def mamba1_scan(u, dt, A, Bm, Cm, D, h0=None):
+    """Sequential selective scan.
+
+    u: (B, L, Di); dt: (B, L, Di); A: (Di, N); Bm/Cm: (B, L, N);
+    D: (Di,); h0: (B, Di, N) or None. Returns (y (B, L, Di), h_last).
+    """
+    Bsz, L, Di = u.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, Di, N), jnp.float32)
+
+    def step(h, inp):
+        # inputs stream in their storage dtype (bf16 in production) and are
+        # upcast per step — the state and all arithmetic stay fp32. This
+        # halves the scan's HBM traffic (the dominant roofline term for the
+        # SSM archs, EXPERIMENTS §Perf iteration 3).
+        u_t, dt_t, B_t, C_t = [t.astype(jnp.float32) for t in inp]
+        dA = jnp.exp(dt_t[..., None] * A[None])            # (B, Di, N)
+        dBu = (dt_t * u_t)[..., None] * B_t[:, None, :]    # (B, Di, N)
+        h = dA * h + dBu
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y.astype(u.dtype)
+
+    inputs = (
+        jnp.moveaxis(u, 1, 0),
+        jnp.moveaxis(dt.astype(u.dtype), 1, 0),
+        jnp.moveaxis(Bm.astype(u.dtype), 1, 0),
+        jnp.moveaxis(Cm.astype(u.dtype), 1, 0),
+    )
+    h_last, ys = _chunked_scan(step, h0, inputs, L)
+    y = (jnp.moveaxis(ys, 0, 1).astype(jnp.float32)
+         + u.astype(jnp.float32) * D[None, None, :])
+    return y, h_last
+
+
+def mamba1_block(p, x, cfg, state=None):
+    """x: (B, L, D). state: None or dict(conv, ssm) for decode.
+    Returns (out, new_state)."""
+    B, L, D = x.shape
+    Di, N = cfg.d_inner, cfg.ssm_state
+    R = _dt_rank(cfg)
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(x.dtype))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = causal_conv1d(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+    proj = jnp.einsum("bld,dr->blr", xs, p["x_proj"].astype(xs.dtype))
+    dt_raw, Bm, Cm = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jnp.einsum("blr,rd->bld", dt_raw, p["dt_proj"].astype(xs.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    h0 = state["ssm"] if state is not None else None
+    if cfg.attn_impl == "flash" and state is None and L > 1:
+        from repro.kernels import ops as kops
+        y, h_last = kops.mamba_scan(xs.astype(jnp.float32), dt, A,
+                                    Bm.astype(jnp.float32),
+                                    Cm.astype(jnp.float32), p["D"])
+    else:
+        y, h_last = mamba1_scan(xs, dt, A, Bm, Cm, p["D"], h0)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bld,de->ble", y, p["out_proj"].astype(x.dtype))
+    return out, {"conv": new_conv, "ssm": h_last}
+
+
+# ---------------------------------------------------------------------- #
+#  Mamba2 block (SSD, scalar A per head)
+# ---------------------------------------------------------------------- #
+def mamba2_scan(u, dt, A, Bm, Cm, D, h0=None):
+    """u: (B, L, H, Pd); dt: (B, L, H); A: (H,); Bm/Cm: (B, L, N);
+    h0: (B, H, Pd, N). Returns (y (B, L, H, Pd), h_last)."""
+    Bsz, L, H, Pd = u.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, Pd, N), jnp.float32)
+
+    def step(h, inp):
+        u_t, dt_t, B_t, C_t = [t.astype(jnp.float32) for t in inp]
+        dA = jnp.exp(dt_t * A[None])                    # (B, H)
+        dBu = (dt_t[..., None] * u_t)[..., None] * B_t[:, None, None, :]
+        h = dA[..., None, None] * h + dBu
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y.astype(u.dtype)
+
+    inputs = (
+        jnp.moveaxis(u, 1, 0),
+        jnp.moveaxis(dt.astype(u.dtype), 1, 0),
+        jnp.moveaxis(Bm.astype(u.dtype), 1, 0),
+        jnp.moveaxis(Cm.astype(u.dtype), 1, 0),
+    )
+    h_last, ys = _chunked_scan(step, h0, inputs, L)
+    y = (jnp.moveaxis(ys, 0, 1).astype(jnp.float32)
+         + u.astype(jnp.float32) * D[None, None, :, None])
+    return y, h_last
+
+
+def mamba2_block(p, x, cfg, state=None):
+    B, L, D = x.shape
+    Di, N = cfg.d_inner, cfg.ssm_state
+    Pd = cfg.ssm_head_dim
+    H = Di // Pd
+    proj = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(x.dtype))
+    z, xBC, dt_raw = jnp.split(proj, [Di, 2 * Di + 2 * N], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xBC, new_conv = causal_conv1d(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(xBC, [Di, Di + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    u = xs.reshape(B, L, H, Pd)
+    h0 = state["ssm"] if state is not None else None
+    y, h_last = mamba2_scan(u, dt, A, Bm, Cm, p["D"], h0)
+    y = y.reshape(B, L, Di).astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bld,de->ble", y, p["out_proj"].astype(x.dtype))
+    return out, {"conv": new_conv, "ssm": h_last}

@@ -1,0 +1,107 @@
+"""Attention-free Mamba1 LM (falcon-mamba-7b): embed → N mamba blocks → head."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import (FSDP, TP, dtype_of, embed_tokens, init_embeddings,
+                     rms_norm, spec_embeddings, stack_fold, unembed)
+from .ssm import init_mamba, mamba1_block, spec_mamba
+from .transformer import _prepend_none, _stack_layer_params
+
+
+def init_lm(key, cfg):
+    dt = dtype_of(cfg.param_dtype)
+    ke, kl = jax.random.split(key)
+    return {
+        "embed": init_embeddings(ke, cfg),
+        "layers": _stack_layer_params(
+            kl, cfg.n_layers,
+            lambda k: {
+                "norm": jnp.ones((cfg.d_model,), dt),
+                "mamba": init_mamba(k, cfg),
+            }),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+def lm_param_specs(cfg):
+    return {
+        "embed": spec_embeddings(cfg),
+        "layers": _prepend_none({"norm": P(None), "mamba": spec_mamba(cfg)}),
+        "final_norm": P(None),
+    }
+
+
+def forward(params, tokens, cfg, vision_embeds=None):
+    x = embed_tokens(params["embed"], tokens, cfg)
+
+    def body(x, lp):
+        h, _ = mamba1_block(lp["mamba"],
+                            rms_norm(x, lp["norm"], cfg.norm_eps), cfg)
+        return x + h, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = stack_fold(body, x, params["layers"], cfg.scan_layers)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg).astype(jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------- #
+#  Serving: constant-size recurrent state (the sub-quadratic long_500k path)
+# ---------------------------------------------------------------------- #
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    del max_seq  # state size independent of context length
+    Di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    L = cfg.n_layers
+    return {
+        "conv": jnp.zeros((L, batch, K - 1, Di), dtype),
+        "ssm": jnp.zeros((L, batch, Di, N), jnp.float32),
+    }
+
+
+def cache_specs(cfg):
+    return {
+        "conv": P(None, FSDP, None, TP),
+        "ssm": P(None, FSDP, TP, None),
+    }
+
+
+def decode_step(params, cache, tokens, pos, cfg):
+    del pos  # recurrent state carries position implicitly
+    x = embed_tokens(params["embed"], tokens, cfg)
+
+    def body(x, inp):
+        lp, conv, ssm = inp
+        h, new_state = mamba1_block(
+            lp["mamba"], rms_norm(x, lp["norm"], cfg.norm_eps), cfg,
+            state={"conv": conv.astype(x.dtype), "ssm": ssm})
+        return x + h, (new_state["conv"], new_state["ssm"])
+
+    x, (convs, ssms) = stack_fold(
+        body, x, (params["layers"], cache["conv"], cache["ssm"]),
+        cfg.scan_layers)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg).astype(jnp.float32)
+    return logits, {"conv": convs.astype(cache["conv"].dtype), "ssm": ssms}
+
+
+def prefill(params, tokens, cfg, max_seq: int, vision_embeds=None,
+            cache_dtype=jnp.bfloat16):
+    x = embed_tokens(params["embed"], tokens, cfg)
+
+    def body(x, lp):
+        h, st = mamba1_block(lp["mamba"],
+                             rms_norm(x, lp["norm"], cfg.norm_eps), cfg)
+        return x + h, st
+
+    x, states = stack_fold(body, x, params["layers"], cfg.scan_layers)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg).astype(jnp.float32)
+    cache = {"conv": states["conv"].astype(cache_dtype), "ssm": states["ssm"]}
+    return logits, cache

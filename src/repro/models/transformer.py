@@ -1,0 +1,253 @@
+"""Decoder-only LM assembly (dense / MoE / VLM) with scan-over-layers.
+
+All repeated layers are stacked on a leading L axis and executed with
+``jax.lax.scan`` so compiled HLO size is depth-independent (required to
+AOT-compile the 61-layer / 384-expert Kimi-K2 on the 512-device dry-run).
+``remat='full'`` wraps the scanned body in ``jax.checkpoint``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from .common import (FSDP, TP, dtype_of, embed_tokens, init_embeddings,
+                     rms_norm, spec_embeddings, stack_fold, unembed)
+from .mlp import init_mlp, mlp, spec_mlp
+
+
+def _stack_layer_params(key, n_layers, init_one):
+    keys = jax.random.split(key, n_layers)
+    per_layer = [init_one(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+def _prepend_none(spec_tree):
+    return jax.tree.map(
+        lambda s: P(*((None,) + tuple(s))), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------- #
+#  Init / specs
+# ---------------------------------------------------------------------- #
+def init_layer(key, cfg, use_moe: bool):
+    k1, k2 = jax.random.split(key)
+    dt = dtype_of(cfg.param_dtype)
+    p = {
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "mlp_norm": jnp.ones((cfg.d_model,), dt),
+        "attn": attn_mod.init_attention(k1, cfg),
+    }
+    if use_moe:
+        p["moe"] = moe_mod.init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k2, cfg)
+    return p
+
+
+def spec_layer(cfg, use_moe: bool):
+    p = {
+        "attn_norm": P(None),
+        "mlp_norm": P(None),
+        "attn": attn_mod.spec_attention(cfg),
+    }
+    if use_moe:
+        p["moe"] = moe_mod.spec_moe(cfg)
+    else:
+        p["mlp"] = spec_mlp()
+    return p
+
+
+def init_lm(key, cfg):
+    dt = dtype_of(cfg.param_dtype)
+    ke, kl, kd = jax.random.split(key, 3)
+    params: dict[str, Any] = {"embed": init_embeddings(ke, cfg)}
+    use_moe = cfg.family == "moe"
+    n_dense = cfg.first_dense_layers if use_moe else 0
+    n_main = cfg.n_layers - n_dense
+    if n_dense:
+        params["dense_layers"] = _stack_layer_params(
+            kd, n_dense, lambda k: init_layer(k, cfg, use_moe=False))
+    params["layers"] = _stack_layer_params(
+        kl, n_main, lambda k: init_layer(k, cfg, use_moe=use_moe))
+    params["final_norm"] = jnp.ones((cfg.d_model,), dt)
+    return params
+
+
+def lm_param_specs(cfg):
+    use_moe = cfg.family == "moe"
+    n_dense = cfg.first_dense_layers if use_moe else 0
+    specs: dict[str, Any] = {"embed": spec_embeddings(cfg)}
+    if n_dense:
+        specs["dense_layers"] = _prepend_none(spec_layer(cfg, use_moe=False))
+    specs["layers"] = _prepend_none(spec_layer(cfg, use_moe=use_moe))
+    specs["final_norm"] = P(None)
+    return specs
+
+
+# ---------------------------------------------------------------------- #
+#  Forward (train / prefill)
+# ---------------------------------------------------------------------- #
+def _layer_fwd(x, lp, cfg, use_moe: bool, mask=None):
+    h, kv = attn_mod.attention(
+        lp["attn"], rms_norm(x, lp["attn_norm"], cfg.norm_eps), cfg,
+        mask=mask)
+    x = x + h
+    hin = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    if use_moe:
+        h, aux = moe_mod.moe(lp["moe"], hin, cfg)
+    else:
+        h, aux = mlp(lp["mlp"], hin), jnp.zeros((), jnp.float32)
+    return x + h, aux, kv
+
+
+def _scan_stack(x, stacked, cfg, use_moe, collect_kv: bool, mask=None):
+    def body(carry, lp):
+        x, aux_acc = carry
+        x, aux, kv = _layer_fwd(x, lp, cfg, use_moe, mask=mask)
+        out = kv if collect_kv else None
+        return (x, aux_acc + aux), out
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    (x, aux), kvs = stack_fold(body, (x, jnp.zeros((), jnp.float32)),
+                               stacked, cfg.scan_layers)
+    return x, aux, kvs
+
+
+def forward(params, tokens, cfg, vision_embeds=None):
+    """Teacher-forcing forward. tokens: (B, S[-V]) int32.
+
+    VLM: ``vision_embeds`` (B, V, D) stub patch embeddings are prepended,
+    giving total sequence S.
+    Returns (logits (B, S, vocab) fp32, aux_loss).
+    """
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if vision_embeds is not None:
+        x = jnp.concatenate(
+            [vision_embeds.astype(x.dtype), x], axis=1)
+    aux_total = jnp.zeros((), jnp.float32)
+    use_moe = cfg.family == "moe"
+    if "dense_layers" in params:
+        x, aux, _ = _scan_stack(x, params["dense_layers"], cfg, False, False)
+        aux_total += aux
+    x, aux, _ = _scan_stack(x, params["layers"], cfg, use_moe, False)
+    aux_total += aux
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg).astype(jnp.float32)
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------- #
+#  Serving: prefill + decode with stacked KV cache
+# ---------------------------------------------------------------------- #
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    use_moe = cfg.family == "moe"
+    n_dense = cfg.first_dense_layers if use_moe else 0
+    n_main = cfg.n_layers - n_dense
+    if cfg.sliding_window is not None:  # ring buffer (see attention_decode)
+        max_seq = min(max_seq, cfg.sliding_window)
+    mk = lambda n: {
+        "k": jnp.zeros((n, batch, cfg.n_kv_heads, max_seq, hd), dtype),
+        "v": jnp.zeros((n, batch, cfg.n_kv_heads, max_seq, hd), dtype),
+    }
+    cache = {"layers": mk(n_main)}
+    if n_dense:
+        cache["dense_layers"] = mk(n_dense)
+    return cache
+
+
+def cache_specs(cfg):
+    """KV cache sharded: batch → data, sequence → model (flash-decode SP)."""
+    s = {"k": P(None, FSDP, None, TP, None),
+         "v": P(None, FSDP, None, TP, None)}
+    use_moe = cfg.family == "moe"
+    out = {"layers": dict(s)}
+    if use_moe and cfg.first_dense_layers:
+        out["dense_layers"] = dict(s)
+    return out
+
+
+def _decode_stack(x, stacked, cache, pos, cfg, use_moe):
+    def body(x, lp_cache):
+        lp, ck, cv = lp_cache
+        h, ck, cv = attn_mod.attention_decode(
+            lp["attn"], rms_norm(x, lp["attn_norm"], cfg.norm_eps),
+            ck, cv, pos, cfg)
+        x = x + h
+        hin = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        if use_moe:
+            h, _ = moe_mod.moe(lp["moe"], hin, cfg)
+        else:
+            h = mlp(lp["mlp"], hin)
+        return x + h, (ck, cv)
+
+    x, (cks, cvs) = stack_fold(body, x, (stacked, cache["k"], cache["v"]),
+                               cfg.scan_layers)
+    return x, {"k": cks, "v": cvs}
+
+
+def decode_step(params, cache, tokens, pos, cfg):
+    """tokens: (B, 1) int32; pos: scalar int32. Returns (logits, new cache)."""
+    x = embed_tokens(params["embed"], tokens, cfg)
+    use_moe = cfg.family == "moe"
+    new_cache = {}
+    if "dense_layers" in params:
+        x, new_cache["dense_layers"] = _decode_stack(
+            x, params["dense_layers"], cache["dense_layers"], pos, cfg, False)
+    x, new_cache["layers"] = _decode_stack(
+        x, params["layers"], cache["layers"], pos, cfg, use_moe)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg).astype(jnp.float32)
+    return logits, new_cache
+
+
+def _cache_write(kv, cache_side, cache_dtype):
+    """Write collected (L, B, K, S, hd) kv into the cache, handling the
+    sliding-window ring layout (slot = abs_pos % S_alloc)."""
+    S = kv.shape[3]
+    S_alloc = cache_side.shape[3]
+    if S > S_alloc:  # keep the last window, rolled into ring slots
+        kv = kv[:, :, :, S - S_alloc:, :]
+        kv = jnp.roll(kv, shift=S % S_alloc, axis=3)
+    return jax.lax.dynamic_update_slice(
+        cache_side, kv.astype(cache_dtype), (0, 0, 0, 0, 0))
+
+
+def prefill(params, tokens, cfg, max_seq: int, vision_embeds=None,
+            cache_dtype=jnp.bfloat16):
+    """Run the prompt, return (logits, cache) with kv written at [0, S)."""
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+    B, S = x.shape[0], x.shape[1]
+    use_moe = cfg.family == "moe"
+    cache = init_cache(cfg, B, max_seq, cache_dtype)
+    out = {}
+    if "dense_layers" in params:
+        x, _, kvs = _scan_stack(x, params["dense_layers"], cfg, False, True)
+        k, v = kvs
+        k = jnp.swapaxes(k, 2, 3)  # (L, B, S, K, hd) -> (L, B, K, S, hd)
+        v = jnp.swapaxes(v, 2, 3)
+        out["dense_layers"] = {
+            "k": _cache_write(k, cache["dense_layers"]["k"], cache_dtype),
+            "v": _cache_write(v, cache["dense_layers"]["v"], cache_dtype),
+        }
+    x, aux, kvs = _scan_stack(x, params["layers"], cfg, use_moe, True)
+    k, v = kvs
+    k = jnp.swapaxes(k, 2, 3)
+    v = jnp.swapaxes(v, 2, 3)
+    out["layers"] = {
+        "k": _cache_write(k, cache["layers"]["k"], cache_dtype),
+        "v": _cache_write(v, cache["layers"]["v"], cache_dtype),
+    }
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg).astype(jnp.float32)
+    return logits, out

@@ -1,0 +1,95 @@
+"""Training step: loss, gradient, optimizer update, microbatching.
+
+The train_step is the unit the dry-run lowers (``jax.jit(train_step,
+in_shardings=..., out_shardings=...)``) and the unit the DVFS scheduler
+treats as one "application run" when scheduling training jobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.optim import adamw
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits fp32 (B, S, V); labels int32 (B, S); mask optional (B, S).
+
+    Written vocab-parallel-friendly: the label pick uses a fused
+    one-hot-compare-reduce over the (TP-sharded) vocab axis instead of
+    take_along_axis — a gather indexed into a sharded dim makes GSPMD
+    all-gather the full logits (B, S, V), which is the single largest
+    tensor in the step."""
+    V = logits.shape[-1]
+    logz = jax.nn.logsumexp(logits, axis=-1)                  # psum over TP
+    onehot = labels[..., None] == jnp.arange(V)[None, None, :]
+    picked = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)  # psum over TP
+    ll = picked - logz
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, batch, cfg, aux_weight: float = 0.01):
+    """batch: dict(tokens (B, S_text), labels (B, S_text), [modality stubs])."""
+    extra = {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+    logits, aux = model_lib.forward(cfg, params, batch["tokens"], extra)
+    # VLM: vision positions carry no labels — logits prefix is dropped
+    S_text = batch["labels"].shape[1]
+    logits = logits[:, -S_text:]
+    loss = cross_entropy(logits, batch["labels"])
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, microbatches: int = 1):
+    """Build the jittable train step: (params, opt_state, batch) → updated.
+
+    ``microbatches > 1`` accumulates gradients over sequential microbatches
+    (lax.scan over batch splits) before the optimizer update — the standard
+    activation-memory lever.
+    """
+
+    def grads_of(params, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg)
+        return loss, aux, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, aux, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                B = x.shape[0]
+                return x.reshape(microbatches, B // microbatches, *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            accum_dt = {"float32": jnp.float32,
+                        "bfloat16": jnp.bfloat16}[cfg.grad_accum_dtype]
+
+            def body(carry, mbatch):
+                g_acc, l_acc = carry
+                loss, _, g = grads_of(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: (a + b.astype(accum_dt)).astype(accum_dt),
+                    g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dt),
+                              params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            aux = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        new_params, new_opt, metrics = adamw.update(params, grads, opt_state,
+                                                    opt_cfg)
+        metrics = dict(metrics, loss=loss, **aux)
+        return new_params, new_opt, metrics
+
+    return train_step

@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step on CPU, asserting shapes and finiteness; plus
+prefill/decode agreement with teacher forcing (the serving path)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_ALIASES, all_configs, get_config
+from repro.configs.base import SHAPES, reduce_for_smoke, shape_applicable
+from repro.models import model
+from repro.optim import adamw
+from repro.train.step import make_train_step
+
+ARCHS = sorted(ARCH_ALIASES)
+
+
+@pytest.fixture(scope="module")
+def smoke_state():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = reduce_for_smoke(get_config(arch))
+            params = model.init(cfg, jax.random.PRNGKey(0))
+            cache[arch] = (cfg, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_finite(arch, smoke_state):
+    cfg, params = smoke_state(arch)
+    B, S = 2, 16
+    Stext = model.text_len(cfg, S)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, Stext), 0,
+                                cfg.vocab_size)
+    extra = model.extra_inputs(cfg, B, S, "train", rng=jax.random.PRNGKey(2))
+    logits, aux = model.forward(cfg, params, tokens, extra)
+    expect_S = S if cfg.family == "vlm" else Stext
+    assert logits.shape == (B, expect_S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch, smoke_state):
+    cfg, params = smoke_state(arch)
+    B, S = 2, 16
+    Stext = model.text_len(cfg, S)
+    ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt = adamw.init(params, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg))
+    rng = jax.random.PRNGKey(3)
+    batch = {
+        "tokens": jax.random.randint(rng, (B, Stext), 0, cfg.vocab_size),
+        "labels": jax.random.randint(rng, (B, Stext), 0, cfg.vocab_size),
+    }
+    batch.update(model.extra_inputs(cfg, B, S, "train",
+                                    rng=jax.random.PRNGKey(4)))
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually changed
+    diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), params, new_params)
+    assert max(jax.tree.leaves(diffs)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch, smoke_state):
+    cfg, params = smoke_state(arch)
+    B, S = 2, 12
+    Stext = model.text_len(cfg, S)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, Stext), 0,
+                                cfg.vocab_size)
+    extra = model.extra_inputs(cfg, B, S, "train", rng=jax.random.PRNGKey(2))
+    logits_full, _ = model.forward(cfg, params, tokens, extra)
+    pre = tokens[:, :Stext - 1]
+    _, cache = model.prefill(cfg, params, pre, max_seq=S + 4, extra=extra,
+                             cache_dtype=jnp.float32)
+    pos = (S - 2) if cfg.family == "vlm" else (Stext - 2)
+    logits_dec, _ = model.decode_step(cfg, params, cache,
+                                      tokens[:, Stext - 1:Stext],
+                                      jnp.int32(pos + 1))
+    err = float(jnp.max(jnp.abs(logits_full[:, -1] - logits_dec[:, 0])))
+    assert err < 2e-2, f"{arch}: decode/forward mismatch {err}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_spec_tree_matches_params(arch, smoke_state):
+    """The PartitionSpec tree must mirror the param tree exactly."""
+    cfg, params = smoke_state(arch)
+    specs = model.param_specs(cfg)
+    pt = jax.tree.structure(params)
+    st = jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert pt == st, f"{arch}: spec treedef != param treedef"
+    # every spec's rank must be <= the param's rank
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    for p, s in zip(flat_p, flat_s):
+        assert len(tuple(s)) <= p.ndim, (arch, p.shape, s)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_cache_spec_tree_matches_cache(arch, smoke_state):
+    cfg, params = smoke_state(arch)
+    cache = model.init_cache(cfg, batch=2, max_seq=16)
+    specs = model.cache_specs(cfg)
+    pt = jax.tree.structure(cache)
+    st = jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert pt == st
+
+
+def test_shape_applicability_table():
+    """DESIGN.md §5: long_500k runs only for sub-quadratic archs."""
+    expect_long = {"zamba2-7b", "falcon-mamba-7b", "mixtral-8x22b"}
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        ok, why = shape_applicable(cfg, SHAPES["long_500k"])
+        assert ok == (arch in expect_long), (arch, why)
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(cfg, SHAPES[s])[0]
+
+
+def test_param_counts_match_public_numbers():
+    expected = {  # billions, ±12% (frontends stubbed, heads untied, etc.)
+        "stablelm-3b": 2.8, "qwen2.5-14b": 14.8, "smollm-360m": 0.36,
+        "mistral-nemo-12b": 12.2, "internvl2-76b": 70.0, "zamba2-7b": 7.0,
+        "falcon-mamba-7b": 7.3, "mixtral-8x22b": 141.0,
+        "kimi-k2-1t-a32b": 1030.0, "whisper-large-v3": 2.0,
+    }
+    for arch, exp in expected.items():
+        got = get_config(arch).param_count() / 1e9
+        assert abs(got - exp) / exp < 0.12, (arch, got, exp)
+
+
+def test_moe_capacity_drop_behavior():
+    """With tight capacity, tokens are dropped, output stays finite, and the
+    residual path keeps the dropped positions' activations."""
+    import dataclasses
+    from repro.models.moe import init_moe, moe
+    cfg = dataclasses.replace(
+        reduce_for_smoke(get_config("mixtral-8x22b")), capacity_factor=0.25)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    out, aux = moe(p, x, cfg)
+    assert out.shape == x.shape
+    assert bool(jnp.isfinite(out).all())
+    assert float(aux) >= 1.0  # LB loss lower bound is 1 at perfect balance

@@ -1,0 +1,179 @@
+"""Unit + property tests for the from-scratch ML core (GBDT, linear, K-means)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gbdt import GBDTParams, OrderedTargetEncoder, fit_gbdt
+from repro.core.kmeans import KMeans, choose_k_elbow
+from repro.core.linear import Lasso, LinearRegression, LinearSVR, Ridge
+from repro.core.metrics import r2, rmse
+
+
+def _toy(n=400, d=6, seed=0, noise=0.05):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    # nonlinear target: interactions + step — linear models should underfit
+    y = (
+        np.sin(2 * X[:, 0])
+        + 0.5 * X[:, 1] * X[:, 2]
+        + (X[:, 3] > 0.3) * 1.5
+        + noise * rng.normal(size=n)
+    )
+    return X, y
+
+
+class TestGBDT:
+    def test_fits_nonlinear_better_than_linear(self):
+        X, y = _toy()
+        Xtr, Xte = X[:300], X[300:]
+        ytr, yte = y[:300], y[300:]
+        gb = fit_gbdt(Xtr, ytr, GBDTParams(iterations=300, depth=4, learning_rate=0.1))
+        lr = LinearRegression().fit(Xtr, ytr)
+        e_gb = rmse(yte, gb.predict(Xte))
+        e_lr = rmse(yte, lr.predict(Xte))
+        assert e_gb < 0.6 * e_lr, (e_gb, e_lr)
+        assert r2(yte, gb.predict(Xte)) > 0.8
+
+    def test_training_loss_monotone_nonincreasing(self):
+        X, y = _toy(n=200)
+        gb = fit_gbdt(X, y, GBDTParams(iterations=100, depth=3, learning_rate=0.3))
+        curve = gb.staged_rmse(X, y)
+        # allow tiny numeric wiggle
+        assert np.all(np.diff(curve) < 1e-9 + 1e-12), curve[np.argmax(np.diff(curve))]
+
+    def test_constant_target(self):
+        X = np.random.default_rng(0).normal(size=(50, 4))
+        y = np.full(50, 3.25)
+        gb = fit_gbdt(X, y, GBDTParams(iterations=10, depth=2))
+        np.testing.assert_allclose(gb.predict(X), 3.25, atol=1e-8)
+
+    def test_feature_importance_finds_signal(self):
+        rng = np.random.default_rng(1)
+        X = rng.normal(size=(500, 8))
+        y = 3.0 * X[:, 5] ** 2 + 0.01 * rng.normal(size=500)
+        gb = fit_gbdt(X, y, GBDTParams(iterations=100, depth=3))
+        imp = gb.feature_importance()
+        assert np.argmax(imp) == 5
+        assert imp[5] > 0.8
+
+    def test_predict_matches_manual_leaf_walk(self):
+        X, y = _toy(n=80, d=4)
+        gb = fit_gbdt(X, y, GBDTParams(iterations=5, depth=2))
+        # manual recompute for row 0
+        x = X[0]
+        pred = gb.base
+        for t in range(5):
+            idx = 0
+            for lvl in range(2):
+                f = gb.feats[t, lvl]
+                if x[f] > gb.thresholds[t, lvl]:
+                    idx |= 1 << lvl
+            pred += gb.leaves[t, idx]
+        np.testing.assert_allclose(gb.predict(X[:1])[0], pred, rtol=1e-10)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n=st.integers(20, 120),
+        d=st.integers(1, 6),
+        depth=st.integers(1, 4),
+    )
+    def test_property_predictions_bounded_by_targets(self, seed, n, d, depth):
+        """Squared-loss GBDT leaf values are averages of residuals ⇒ ensemble
+        predictions on ANY input stay within [min(y)-eps, max(y)+eps] scaled by
+        the boosting overshoot bound (≤ small factor of target range)."""
+        rng = np.random.default_rng(seed)
+        X = rng.normal(size=(n, d))
+        y = rng.normal(size=n)
+        gb = fit_gbdt(X, y, GBDTParams(iterations=40, depth=depth, learning_rate=0.2))
+        Xq = rng.normal(size=(64, d)) * 3
+        pred = gb.predict(Xq)
+        lo, hi = y.min(), y.max()
+        span = max(hi - lo, 1e-6)
+        assert np.all(pred > lo - span) and np.all(pred < hi + span)
+
+    def test_ordered_target_encoder_no_leak_and_inference(self):
+        rng = np.random.default_rng(0)
+        n = 200
+        cats = rng.integers(0, 3, size=n).astype(float)
+        y = cats * 2.0 + 0.01 * rng.normal(size=n)
+        X = np.stack([cats, rng.normal(size=n)], axis=1)
+        enc = OrderedTargetEncoder(random_state=0)
+        Xt = enc.fit_transform(X, y, cat_cols=[0])
+        assert Xt.shape == X.shape
+        # inference encoding should be near per-category target means
+        Xq = np.array([[0.0, 0.0], [1.0, 0.0], [2.0, 0.0]])
+        Xq_t = enc.transform(Xq)
+        assert Xq_t[0, 0] < Xq_t[1, 0] < Xq_t[2, 0]
+
+
+class TestLinear:
+    def test_ols_recovers_coefficients(self):
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(200, 4))
+        w = np.array([1.0, -2.0, 0.5, 3.0])
+        y = X @ w + 0.7
+        lr = LinearRegression().fit(X, y)
+        np.testing.assert_allclose(lr.predict(X), y, atol=1e-8)
+
+    def test_lasso_sparsity(self):
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(300, 10))
+        y = 2.0 * X[:, 0] - 1.0 * X[:, 1]  # only 2 informative features
+        las = Lasso(alpha=0.1).fit(X, y)
+        nz = np.abs(las.coef_) > 1e-3
+        assert nz[0] and nz[1]
+        assert nz.sum() <= 4  # mostly sparse
+
+    def test_ridge_shrinks_vs_ols(self):
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(50, 5))
+        y = X @ np.ones(5)
+        r_small = Ridge(alpha=1e-6).fit(X, y)
+        r_big = Ridge(alpha=1e4).fit(X, y)
+        assert np.linalg.norm(r_big.coef_) < np.linalg.norm(r_small.coef_)
+
+    def test_svr_reasonable_fit(self):
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(300, 3))
+        y = X @ np.array([1.0, 2.0, -1.0]) + 0.5
+        svr = LinearSVR(max_iter=2000).fit(X, y)
+        assert rmse(y, svr.predict(X)) < 0.3
+
+
+class TestKMeans:
+    def test_separated_blobs(self):
+        rng = np.random.default_rng(0)
+        blobs = [rng.normal(loc=c, scale=0.1, size=(30, 2)) for c in
+                 [(0, 0), (5, 5), (-5, 5)]]
+        X = np.concatenate(blobs)
+        km = KMeans(k=3, random_state=0).fit(X)
+        labels = km.labels_
+        # each blob is a single cluster
+        for i in range(3):
+            seg = labels[i * 30:(i + 1) * 30]
+            assert len(np.unique(seg)) == 1
+        assert len(np.unique(labels)) == 3
+
+    def test_predict_consistent_with_fit(self):
+        rng = np.random.default_rng(1)
+        X = rng.normal(size=(60, 4))
+        km = KMeans(k=4, random_state=0).fit(X)
+        np.testing.assert_array_equal(km.predict(X), km.labels_)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000), k=st.integers(1, 5))
+    def test_property_sse_nonincreasing_in_k(self, seed, k):
+        rng = np.random.default_rng(seed)
+        X = rng.normal(size=(40, 3))
+        s1 = KMeans(k=k, random_state=0).fit(X).sse_
+        s2 = KMeans(k=k + 2, random_state=0).fit(X).sse_
+        assert s2 <= s1 * 1.05 + 1e-9  # allow local-minimum slack
+
+    def test_elbow_on_obvious_structure(self):
+        rng = np.random.default_rng(0)
+        blobs = [rng.normal(loc=c, scale=0.05, size=(20, 2))
+                 for c in [(0, 0), (10, 0), (0, 10), (10, 10)]]
+        X = np.concatenate(blobs)
+        k = choose_k_elbow(X, k_max=8)
+        assert 3 <= k <= 5
