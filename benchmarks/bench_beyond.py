@@ -1,6 +1,7 @@
 """Beyond-paper benchmarks: oracle gap, multi-accelerator scheduling (the
-paper's future work), heavy-backlog stress, and straggler mitigation via
-DVFS (the paper's technique pointed at fleet health)."""
+paper's future work), heavy-backlog stress, straggler mitigation via
+DVFS (the paper's technique pointed at fleet health), and the large-scale
+streaming scenario exercising the PredictionService cache."""
 from __future__ import annotations
 
 import time
@@ -8,14 +9,70 @@ import time
 import numpy as np
 
 from benchmarks.common import csv, fixtures
-from repro.core import Testbed, make_workload, run_schedule
+from repro.core import (PredictionService, Testbed, make_workload,
+                        run_schedule, stream_workload)
 from repro.core.dvfs import V5E_DVFS
+from repro.core.scheduler import legacy_run_schedule
 from repro.dist.fault_tolerance import StragglerMonitor
+
+
+def large_scale(f) -> dict:
+    """≥1000 jobs on 8 devices, streamed. The cached table path must issue
+    at most one table build per distinct app; the legacy per-decision path
+    re-predicts the full ladder for every job — measured head-to-head."""
+    tb = f["testbed"]
+    n_jobs, n_devices = 1000, 8
+    service = PredictionService(tb.dvfs, predictor=f["predictor"],
+                                app_features=f["features"], testbed=tb)
+
+    t0 = time.time()
+    r_new = run_schedule(
+        stream_workload(f["apps"], tb, n_jobs=n_jobs, seed=0,
+                        n_devices=n_devices),
+        "min-energy", Testbed(seed=100), service=service,
+        n_devices=n_devices)
+    t_new = time.time() - t0
+
+    jobs = list(stream_workload(f["apps"], tb, n_jobs=n_jobs, seed=0,
+                                n_devices=n_devices))
+    t0 = time.time()
+    r_old = legacy_run_schedule(jobs, "min-energy", Testbed(seed=100),
+                                predictor=f["predictor"],
+                                app_features=f["features"],
+                                n_devices=n_devices)
+    t_old = time.time() - t0
+
+    n_apps = len(f["apps"])
+    assert r_new.records == r_old.records, "cached path diverged from legacy"
+    assert service.stats.table_builds <= n_apps, service.stats.summary()
+    csv("beyond_scale_1000x8", t_new,
+        f"jobs={n_jobs} devices={n_devices} "
+        f"table_builds={service.stats.table_builds}/{n_apps}apps "
+        f"hits={service.stats.table_hits} "
+        f"cached={t_new:.2f}s legacy={t_old:.2f}s "
+        f"speedup={t_old / max(t_new, 1e-9):.1f}x "
+        f"E={r_new.total_energy:.0f}J miss={r_new.misses}/{n_jobs}")
+    print(f"# claim[prediction cache]: {service.stats.table_builds} table "
+          f"builds for {n_jobs} jobs over {n_apps} distinct apps "
+          f"({'OK' if service.stats.table_builds <= n_apps else 'FAIL'}); "
+          f"{t_old / max(t_new, 1e-9):.1f}x faster than per-decision")
+    return {
+        "jobs": n_jobs, "devices": n_devices,
+        "table_builds": service.stats.table_builds,
+        "distinct_apps": n_apps,
+        "t_cached_s": t_new, "t_legacy_s": t_old,
+        "energy": r_new.total_energy, "misses": r_new.misses,
+    }
 
 
 def main() -> dict:
     f = fixtures()
     out = {}
+    out["large_scale"] = large_scale(f)
+
+    # shared prediction service: every run below reuses the same tables
+    svc = PredictionService(f["testbed"].dvfs, predictor=f["predictor"],
+                            app_features=f["features"], testbed=f["testbed"])
 
     # oracle gap: how much of the theoretical saving the predictor captures
     t0 = time.time()
@@ -24,8 +81,7 @@ def main() -> dict:
         jobs = make_workload(f["apps"], f["testbed"], seed=seed)
         for pol in e:
             r = run_schedule(jobs, pol, Testbed(seed=100 + seed),
-                             predictor=f["predictor"],
-                             app_features=f["features"])
+                             service=svc)
             e[pol].append(r.total_energy)
     dc, dd, oc = (np.mean(e[p]) for p in ("dc", "d-dvfs", "oracle"))
     gap = (dc - dd) / max(dc - oc, 1e-9)
@@ -40,8 +96,7 @@ def main() -> dict:
     for nd in (1, 2, 4):
         jobs = make_workload(f["apps"], f["testbed"], seed=0)
         r = run_schedule(jobs, "min-energy", Testbed(seed=100),
-                         predictor=f["predictor"],
-                         app_features=f["features"], n_devices=nd)
+                         service=svc, n_devices=nd)
         res[nd] = (r.total_energy, r.makespan, r.misses)
     csv("beyond_multidev", time.time() - t0, " ".join(
         f"n={k}:E={v[0]:.0f}J,makespan={v[1]:.0f}s,miss={v[2]}"
@@ -56,13 +111,13 @@ def main() -> dict:
                              arrival_range=(1.0, 12.0))
         for pol in miss:
             r = run_schedule(jobs, pol, Testbed(seed=100 + seed),
-                             predictor=f["predictor"],
-                             app_features=f["features"])
+                             service=svc)
             miss[pol] += r.misses
     csv("beyond_backlog", time.time() - t0,
         f"arrivals_1-12s misses: d-dvfs={miss['d-dvfs']}/96 "
         f"dc={miss['dc']}/96")
     out["backlog_misses"] = miss
+    csv("beyond_service_stats", 0.0, svc.stats.summary())
 
     # straggler mitigation via DVFS: slow replica's step time restored
     t0 = time.time()

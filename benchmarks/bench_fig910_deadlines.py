@@ -10,12 +10,14 @@ import time
 import numpy as np
 
 from benchmarks.common import csv, fixtures
-from repro.core import Testbed, make_workload, run_schedule
+from repro.core import PredictionService, Testbed, make_workload, run_schedule
 
 
 def main() -> dict:
     f = fixtures()
     t0 = time.time()
+    svc = PredictionService(f["testbed"].dvfs, predictor=f["predictor"],
+                            app_features=f["features"], testbed=f["testbed"])
     jobs = make_workload(f["apps"], f["testbed"], seed=0)
     # Fig. 9: the workload profile
     for j in sorted(jobs, key=lambda j: j.job_id):
@@ -25,9 +27,7 @@ def main() -> dict:
     # Fig. 10: normalized completion (end / deadline, <1 = met)
     out = {}
     for pol in ("dc", "mc", "d-dvfs"):
-        r = run_schedule(jobs, pol, Testbed(seed=100),
-                         predictor=f["predictor"],
-                         app_features=f["features"])
+        r = run_schedule(jobs, pol, Testbed(seed=100), service=svc)
         rows = {x.name: x.end / x.deadline for x in r.records}
         out[pol] = rows
         csv(f"fig10_{pol}", time.time() - t0, " ".join(
@@ -46,8 +46,7 @@ def main() -> dict:
         }
         for k, kw in variants.items():
             r = run_schedule(jb, "d-dvfs", Testbed(seed=100 + seed),
-                             predictor=f["predictor"],
-                             app_features=f["features"], **kw)
+                             service=svc, **kw)
             miss[k] += r.misses
             energy[k].append(r.total_energy)
     for k in miss:

@@ -43,7 +43,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated bench keys")
     args = ap.parse_args()
-    only = set(args.only.split(",")) if args.only else None
+    only = None
+    if args.only is not None:
+        only = {k for k in args.only.split(",") if k}
+        valid = {key for key, _, _ in BENCHES}
+        unknown = only - valid
+        if unknown or not only:
+            ap.error(f"unknown bench key(s) {sorted(unknown)}; "
+                     f"valid keys: {sorted(valid)}")
 
     failures = []
     t_all = time.time()

@@ -15,9 +15,9 @@ import os
 
 import numpy as np
 
-from repro.core import (AppProfile, EnergyTimePredictor, PredictorConfig,
-                        Testbed, build_dataset, make_workload,
-                        profile_features, run_schedule)
+from repro.core import (AppProfile, EnergyTimePredictor, PredictionService,
+                        PredictorConfig, Testbed, build_dataset,
+                        make_workload, profile_features, run_schedule)
 from repro.configs.paper_suite import PAPER_APPS
 
 _DIR = os.path.join(os.path.dirname(__file__), "..", "results")
@@ -84,14 +84,20 @@ def main():
 
     jobs = make_workload(apps, testbed, seed=1,
                          arrival_range=(1.0, 120.0))
+    # one shared prediction service: the app × clock-ladder tables are
+    # built once and reused by every policy below (run_schedule wires the
+    # EventEngine + default budget managers around it)
+    run_tb = Testbed(seed=42)
+    service = PredictionService(run_tb.dvfs, predictor=predictor,
+                                app_features=feats, testbed=run_tb)
     print()
     for policy in ("mc", "dc", "d-dvfs", "oracle"):
-        r = run_schedule(jobs, policy, Testbed(seed=42),
-                         predictor=predictor, app_features=feats)
+        r = run_schedule(jobs, policy, run_tb, service=service)
         # fleet energy = per-chip energy x chips
         print(f"  {policy:7s} per-chip E={r.total_energy:9.1f} J  "
               f"fleet E={r.total_energy*256/3.6e6:7.2f} kWh  "
               f"misses={r.misses}")
+    print(f"\n  prediction service: {service.stats.summary()}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# One-command gate for every PR: tier-1 tests + a fast scheduler benchmark
+# smoke (CPU / Pallas-interpret mode — no accelerator required).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1: pytest ==="
+python -m pytest -x -q
+
+echo "=== smoke: Fig. 7/8 energy benchmark ==="
+python -m benchmarks.run --only fig78
+
+echo "=== ci.sh: all green ==="

@@ -1,4 +1,9 @@
-"""Core: the paper's contribution — data-driven DVFS + deadline scheduling."""
+"""Core: the paper's contribution — data-driven DVFS + deadline scheduling.
+
+Layered as: prediction (``predictor`` + ``prediction_service``) →
+policy (``policies``) → execution (``engine``), with ``scheduler`` wiring
+them behind the classic ``run_schedule`` entry point.
+"""
 from .dvfs import ClockPair, DVFSConfig, V5E_DVFS
 from .simulator import AppProfile, Measurement, Testbed
 from .features import (ALL_INPUT_NAMES, CATEGORICAL_FEATURES, FEATURE_NAMES,
@@ -6,8 +11,13 @@ from .features import (ALL_INPUT_NAMES, CATEGORICAL_FEATURES, FEATURE_NAMES,
 from .predictor import (EnergyTimePredictor, PredictorConfig, loocv_rmse,
                         normalized_rmse)
 from .correlate import CorrelationIndex
-from .workload import Job, make_workload
-from .scheduler import POLICIES, ScheduleResult, run_schedule
+from .workload import Job, make_workload, stream_workload
+from .prediction_service import ClockTable, PredictionService, ServiceStats
+from .policies import (BudgetManager, Policy, QueueAwareBudget,
+                       VirtualPacingBudget, resolve_policy)
+from .engine import EngineHooks, EventEngine
+from .scheduler import (POLICIES, ScheduleResult, legacy_run_schedule,
+                        run_schedule)
 
 __all__ = [
     "ClockPair", "DVFSConfig", "V5E_DVFS",
@@ -15,6 +25,9 @@ __all__ = [
     "ALL_INPUT_NAMES", "CATEGORICAL_FEATURES", "FEATURE_NAMES",
     "build_dataset", "profile_features",
     "EnergyTimePredictor", "PredictorConfig", "loocv_rmse", "normalized_rmse",
-    "CorrelationIndex", "Job", "make_workload",
-    "POLICIES", "ScheduleResult", "run_schedule",
+    "CorrelationIndex", "Job", "make_workload", "stream_workload",
+    "ClockTable", "PredictionService", "ServiceStats",
+    "BudgetManager", "Policy", "QueueAwareBudget", "VirtualPacingBudget",
+    "resolve_policy", "EngineHooks", "EventEngine",
+    "POLICIES", "ScheduleResult", "run_schedule", "legacy_run_schedule",
 ]

@@ -1,0 +1,240 @@
+"""Event-driven scheduling core: streaming arrivals, multi-device dispatch.
+
+The reusable heart of the scheduler, decomposed out of the original
+``run_schedule`` monolith. The engine owns only *mechanism*:
+
+* an **arrival stream** — jobs come from any iterable, consumed lazily in
+  nondecreasing arrival order (a generator works: the engine never asks for
+  ``len()`` and never materializes the future — the online/streaming
+  setting the paper's batch formulation cannot express);
+* a **device pool** — min-heap of ``(free_time, device)``, EDF job queue,
+  per-device clock state (``device_clocks``) updated at each dispatch;
+* **delegation**: budgets come from the composable
+  :class:`~repro.core.policies.BudgetManager` chain, clock choice from the
+  :class:`~repro.core.policies.Policy`, predictions from the shared
+  :class:`~repro.core.prediction_service.PredictionService`;
+* **hooks** (:class:`EngineHooks`) for tracing every admit / dispatch /
+  completion without touching scheduler code.
+
+The event loop reproduces the legacy implementation decision-for-decision
+(and RNG-draw-for-RNG-draw), so results are bit-identical — verified by
+tests/test_engine.py against the retained ``legacy_run_schedule``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Iterable, Iterator, Optional, Sequence
+
+import numpy as np
+
+from .dvfs import ClockPair
+from .policies import BudgetManager, Policy, resolve_policy
+from .prediction_service import PredictionService
+from .simulator import Testbed
+from .workload import Job
+
+__all__ = ["ExecutionRecord", "ScheduleResult", "EngineHooks", "EventEngine"]
+
+
+@dataclasses.dataclass
+class ExecutionRecord:
+    job_id: int
+    name: str
+    arrival: float
+    deadline: float
+    start: float
+    end: float
+    device: int
+    clock: ClockPair
+    time_s: float
+    power_w: float
+    energy_j: float
+    predicted_time: float | None
+    predicted_power: float | None
+    met_deadline: bool
+    had_feasible_clock: bool
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    policy: str
+    records: list[ExecutionRecord]
+
+    @property
+    def total_energy(self) -> float:
+        return sum(r.energy_j for r in self.records)
+
+    @property
+    def misses(self) -> int:
+        return sum(not r.met_deadline for r in self.records)
+
+    @property
+    def makespan(self) -> float:
+        return max((r.end for r in self.records), default=0.0)
+
+    def energy_by_app(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for r in self.records:
+            out[r.name] = out.get(r.name, 0.0) + r.energy_j
+        return out
+
+
+@dataclasses.dataclass
+class EngineHooks:
+    """Optional per-event callbacks (tracing / live dashboards)."""
+
+    on_admit: Optional[Callable[[Job, float], None]] = None
+    on_dispatch: Optional[Callable[[Job, int, ClockPair, float], None]] = None
+    on_complete: Optional[Callable[[ExecutionRecord], None]] = None
+
+
+class _ArrivalStream:
+    """One-item-lookahead wrapper over a job iterable.
+
+    Lists/tuples are sorted by arrival (legacy behavior); any other iterable
+    is consumed lazily and must already be in nondecreasing arrival order
+    (checked as it streams)."""
+
+    def __init__(self, jobs: Iterable[Job]):
+        if isinstance(jobs, (list, tuple)):
+            self._it: Iterator[Job] = iter(
+                sorted(jobs, key=lambda j: j.arrival))
+        else:
+            self._it = iter(jobs)
+        self._last_arrival = -np.inf
+        self._head: Optional[Job] = next(self._it, None)
+
+    @property
+    def exhausted(self) -> bool:
+        return self._head is None
+
+    def peek_arrival(self) -> float:
+        return self._head.arrival
+
+    def pop(self) -> Job:
+        job = self._head
+        if job.arrival < self._last_arrival:
+            raise ValueError(
+                f"job stream out of order: arrival {job.arrival} after "
+                f"{self._last_arrival}")
+        self._last_arrival = job.arrival
+        self._head = next(self._it, None)
+        return job
+
+
+class EventEngine:
+    """Composable event-driven scheduler.
+
+    Example::
+
+        service = PredictionService(testbed.dvfs, predictor, app_features,
+                                    testbed=testbed)
+        engine = EventEngine(testbed, MinEnergy(testbed.dvfs),
+                             service=service, n_devices=8)
+        result = engine.run(stream_workload(apps, testbed, n_jobs=1000))
+    """
+
+    def __init__(
+        self,
+        testbed: Testbed,
+        policy: str | Policy,
+        service: Optional[PredictionService] = None,
+        n_devices: int = 1,
+        budget_managers: Sequence[BudgetManager] = (),
+        hooks: Optional[EngineHooks] = None,
+        seed: int = 0,
+    ):
+        self.testbed = testbed
+        self.policy = resolve_policy(policy, testbed.dvfs)
+        self.service = service
+        self.n_devices = int(n_devices)
+        self.budget_managers = list(budget_managers)
+        self.hooks = hooks or EngineHooks()
+        self.seed = seed
+        self.device_clocks: dict[int, Optional[ClockPair]] = {}
+        if self.policy.table_kind != "none" and service is None:
+            raise ValueError(
+                f"policy {self.policy.name!r} needs a PredictionService")
+        if (self.policy.table_kind == "predicted"
+                and not service.has_predictor):
+            raise ValueError(
+                f"policy {self.policy.name!r} needs a fitted predictor")
+
+    # ------------------------------------------------------------------ #
+    def _table_for(self, job: Job):
+        kind = self.policy.table_kind
+        if kind == "predicted":
+            return self.service.table(job.name)
+        if kind == "truth":
+            return self.service.truth_table(job.app)
+        return None
+
+    def run(self, jobs: Iterable[Job]) -> ScheduleResult:
+        """Execute the stream to completion; returns per-job records."""
+        stream = _ArrivalStream(jobs)
+        rng = np.random.default_rng(self.seed)
+        for bm in self.budget_managers:
+            bm.reset()
+        self.device_clocks = {dev: None for dev in range(self.n_devices)}
+
+        free = [(0.0, dev) for dev in range(self.n_devices)]
+        heapq.heapify(free)
+        queue: list[tuple[float, int, Job]] = []   # (deadline, tiebreak, job)
+        counter = 0
+        records: list[ExecutionRecord] = []
+        d = self.testbed.dvfs
+
+        while not stream.exhausted or queue:
+            free_t, dev = heapq.heappop(free)
+            # admit everything that has arrived by the time this device
+            # frees up; if the queue is empty, jump to the next arrival
+            if not queue:
+                if stream.exhausted:
+                    break
+                free_t = max(free_t, stream.peek_arrival())
+            while not stream.exhausted and stream.peek_arrival() <= free_t:
+                job = stream.pop()
+                heapq.heappush(queue, (job.deadline, counter, job))
+                counter += 1
+                for bm in self.budget_managers:
+                    bm.on_admit(job)
+                if self.hooks.on_admit:
+                    self.hooks.on_admit(job, free_t)
+            if not queue:
+                heapq.heappush(free, (free_t, dev))
+                continue
+
+            _, _, job = heapq.heappop(queue)       # EDF (paper line 5)
+            for bm in self.budget_managers:
+                bm.on_pop(job)
+            start = max(free_t, job.arrival)
+            budget = job.deadline - start
+            for bm in self.budget_managers:
+                budget = bm.apply(job, start, budget)
+
+            sel = self.policy.select_clock(job, budget, self._table_for(job))
+            clock = sel.clock
+            if clock is None:
+                clock = d.max_clock        # sprint (see scheduler docstring)
+            if self.hooks.on_dispatch:
+                self.hooks.on_dispatch(job, dev, clock, start)
+            self.device_clocks[dev] = clock
+
+            meas = self.testbed.run(job.app, clock, rng=rng)
+            end = start + meas.time_s
+            rec = ExecutionRecord(
+                job_id=job.job_id, name=job.name, arrival=job.arrival,
+                deadline=job.deadline, start=start, end=end, device=dev,
+                clock=clock, time_s=meas.time_s, power_w=meas.power_w,
+                energy_j=meas.energy_j, predicted_time=sel.time,
+                predicted_power=sel.power,
+                met_deadline=end <= job.deadline + 1e-9,
+                had_feasible_clock=sel.feasible,
+            )
+            records.append(rec)
+            if self.hooks.on_complete:
+                self.hooks.on_complete(rec)
+            heapq.heappush(free, (end, dev))
+
+        return ScheduleResult(policy=self.policy.name, records=records)

@@ -1,0 +1,293 @@
+"""Pluggable clock-selection policies + composable budget managers.
+
+The monolithic if/elif dispatch in the original ``run_schedule`` becomes a
+registry of :class:`Policy` objects, each implementing one method::
+
+    select_clock(job, budget, table) -> ClockSelection
+
+``table`` is the :class:`~repro.core.prediction_service.ClockTable` the
+policy declared it needs (``table_kind``: predicted ladder table, ground
+truth, or none) — policies never call the predictor themselves, so every
+policy automatically benefits from the service's memoization, and new
+policies are one small class, not another elif arm.
+
+Budget shaping (how much of the wall clock a job may consume) is factored
+out of the policies into :class:`BudgetManager` components that observe
+queue admissions/removals and cap the budget at decision time:
+
+* :class:`QueueAwareBudget` — the beyond-paper backlog guard: job *i*'s
+  budget is capped by every queued job *j*'s deadline minus the sprint
+  (max-clock) time of jobs ahead of it. The original implementation
+  re-sorted the whole queue and re-predicted ``t_min`` per decision; this
+  one maintains an EDF-ordered list incrementally (bisect insert/remove)
+  with ``t_min`` attached once at admission.
+* :class:`VirtualPacingBudget` — the virtual default-clock pacing guard
+  protecting future arrivals (see scheduler module docstring for the math).
+
+Both produce budgets identical to the legacy path (asserted by the
+equivalence tests in tests/test_engine.py).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from .dvfs import ClockPair, DVFSConfig
+from .prediction_service import ClockTable
+from .workload import Job
+
+__all__ = [
+    "ClockSelection",
+    "Policy",
+    "DefaultClock",
+    "MaxClock",
+    "PaperDDVFS",
+    "MinEnergy",
+    "RiskAware",
+    "Oracle",
+    "POLICIES",
+    "POLICY_NAMES",
+    "resolve_policy",
+    "BudgetManager",
+    "QueueAwareBudget",
+    "VirtualPacingBudget",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClockSelection:
+    """A policy's verdict for one job: the clock to run at (None = no
+    feasible clock; the engine sprints at max clock and flags the job),
+    plus the predictions backing the choice (None for non-predictive
+    policies)."""
+
+    clock: Optional[ClockPair]
+    power: Optional[float] = None
+    time: Optional[float] = None
+
+    @property
+    def feasible(self) -> bool:
+        return self.clock is not None
+
+
+class Policy:
+    """Base class: stateless clock-selection strategy.
+
+    ``table_kind`` declares the input the engine must fetch from the
+    prediction service: ``"predicted"`` (learned-model ladder table, with
+    correlation indirection), ``"truth"`` (ground-truth sweep — oracle
+    only), or ``"none"``.
+    """
+
+    name: str = ""
+    table_kind: str = "none"
+
+    def __init__(self, dvfs: DVFSConfig):
+        self.dvfs = dvfs
+
+    def select_clock(self, job: Job, budget: float,
+                     table: Optional[ClockTable]) -> ClockSelection:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"{type(self).__name__}({self.name!r})"
+
+
+class DefaultClock(Policy):
+    """Paper's DC baseline: every job at the default application clock."""
+
+    name = "dc"
+
+    def select_clock(self, job, budget, table):
+        return ClockSelection(self.dvfs.default_clock)
+
+
+class MaxClock(Policy):
+    """Paper's MC baseline ("computational sprinting"): always max clock."""
+
+    name = "mc"
+
+    def select_clock(self, job, budget, table):
+        return ClockSelection(self.dvfs.max_clock)
+
+
+class PaperDDVFS(Policy):
+    """Algorithm 1 lines 9-20, literally: scan the ladder in documented
+    order, accept a clock iff it improves BOTH the best predicted power and
+    the best predicted time seen so far (``maxTime`` starts at the budget
+    and tightens on every accept)."""
+
+    name = "d-dvfs"
+    table_kind = "predicted"
+
+    def select_clock(self, job, budget, table):
+        min_power, max_time = np.inf, budget
+        best, bp, bt = None, None, None
+        for c, p, t in zip(table.clocks, table.P, table.T):
+            if p < min_power and t < max_time:
+                min_power, max_time = p, t
+                best, bp, bt = c, float(p), float(t)
+        return ClockSelection(best, bp, bt)
+
+
+class MinEnergy(Policy):
+    """Beyond-paper: argmin predicted energy (P·T) s.t. predicted time
+    within budget."""
+
+    name = "min-energy"
+    table_kind = "predicted"
+    margin: float = 0.0
+
+    def select_clock(self, job, budget, table):
+        T_guard = table.T * (1.0 + self.margin)
+        feasible = T_guard <= budget
+        if not feasible.any():
+            return ClockSelection(None)
+        E = np.where(feasible, table.P * table.T, np.inf)
+        i = int(np.argmin(E))
+        return ClockSelection(table.clocks[i], float(table.P[i]),
+                              float(table.T[i]))
+
+
+class RiskAware(MinEnergy):
+    """Min-energy with the time estimate inflated by ``margin`` — insurance
+    against predictor underestimates (deadline risk)."""
+
+    name = "risk-aware"
+
+    def __init__(self, dvfs: DVFSConfig, margin: float = 0.05):
+        super().__init__(dvfs)
+        self.margin = float(margin)
+
+
+class Oracle(Policy):
+    """Ground-truth exhaustive minimum-energy feasible clock — the
+    unreachable lower bound quantifying the prediction gap."""
+
+    name = "oracle"
+    table_kind = "truth"
+
+    def select_clock(self, job, budget, table):
+        E = np.where(table.T <= budget, table.T * table.P, np.inf)
+        i = int(np.argmin(E))
+        if not np.isfinite(E[i]):
+            return ClockSelection(None)
+        return ClockSelection(table.clocks[i], float(table.P[i]),
+                              float(table.T[i]))
+
+
+#: Registry — plug new policies in by adding a class here (or by mutating at
+#: runtime for experiments); the engine and ``run_schedule`` resolve names
+#: through this dict.
+POLICIES: dict[str, type[Policy]] = {
+    cls.name: cls
+    for cls in (DefaultClock, MaxClock, PaperDDVFS, MinEnergy, RiskAware,
+                Oracle)
+}
+POLICY_NAMES: tuple[str, ...] = tuple(POLICIES)
+
+
+def resolve_policy(policy: str | Policy, dvfs: DVFSConfig,
+                   risk_margin: float = 0.05) -> Policy:
+    """Name → Policy instance (instances pass through unchanged)."""
+    if isinstance(policy, Policy):
+        return policy
+    cls = POLICIES.get(policy)
+    if cls is None:
+        raise ValueError(
+            f"unknown policy {policy!r}; choose from {POLICY_NAMES}")
+    if cls is RiskAware:
+        return cls(dvfs, margin=risk_margin)
+    return cls(dvfs)
+
+
+# ---------------------------------------------------------------------- #
+#  Budget managers
+# ---------------------------------------------------------------------- #
+class BudgetManager:
+    """Observes the queue and caps per-job time budgets at decision time."""
+
+    def reset(self) -> None:
+        """Forget all state (called once per engine run)."""
+
+    def on_admit(self, job: Job) -> None:
+        """``job`` entered the ready queue."""
+
+    def on_pop(self, job: Job) -> None:
+        """``job`` left the queue (about to be dispatched)."""
+
+    def apply(self, job: Job, start: float, budget: float) -> float:
+        """Return the (possibly reduced) budget for ``job`` starting at
+        ``start``."""
+        return budget
+
+
+class QueueAwareBudget(BudgetManager):
+    """Cap job i's budget so queued jobs can still sprint to their deadlines:
+
+        budget_i = min(budget_i, min_m(d_{j_m} − start − Σ_{k≤m} tmin_{j_k}))
+
+    over the queued jobs j in EDF order. Incremental: the EDF order is a
+    bisect-maintained sorted list and each job's ``t_min`` is computed once
+    at admission (the prediction service memoizes it per app anyway)."""
+
+    def __init__(self, t_min: Callable[[Job], float]):
+        self.t_min = t_min
+        self.reset()
+
+    def reset(self):
+        self._entries: list[tuple[float, int, float]] = []  # (dl, seq, tmin)
+        # id(job) -> FIFO of admission keys (the same Job object may be
+        # admitted more than once in synthetic/replayed workloads)
+        self._keys_of: dict[int, list[tuple[float, int]]] = {}
+        self._seq = 0
+
+    def on_admit(self, job):
+        key = (job.deadline, self._seq)
+        self._seq += 1
+        self._keys_of.setdefault(id(job), []).append(key)
+        bisect.insort(self._entries, (*key, self.t_min(job)))
+
+    def on_pop(self, job):
+        keys = self._keys_of.get(id(job))
+        if not keys:
+            return
+        key = keys.pop(0)   # earliest admission first — matches EDF tiebreak
+        if not keys:
+            del self._keys_of[id(job)]
+        i = bisect.bisect_left(self._entries, key)
+        if i < len(self._entries) and self._entries[i][:2] == key:
+            del self._entries[i]
+
+    def apply(self, job, start, budget):
+        cum = 0.0
+        for dl, _, tmin in self._entries:
+            cum += tmin
+            budget = min(budget, dl - start - cum)
+        return budget
+
+
+class VirtualPacingBudget(BudgetManager):
+    """Track the virtual default-clock schedule over execution order and cap
+    each job's budget at DC-pace plus a ``slack_share`` fraction of its own
+    deadline slack — bounding the delay imposed on future arrivals (see
+    scheduler module docstring)."""
+
+    def __init__(self, t_dc: Callable[[Job], float], slack_share: float = 0.2):
+        self.t_dc = t_dc
+        self.slack_share = float(slack_share)
+        self.reset()
+
+    def reset(self):
+        self._vdc = 0.0   # virtual DC-schedule completion time
+
+    def apply(self, job, start, budget):
+        t_dc_i = self.t_dc(job)
+        vdc_i = max(self._vdc, job.arrival) + t_dc_i
+        self._vdc = vdc_i
+        pace = (vdc_i - start) + self.slack_share * max(
+            0.0, job.deadline - vdc_i)
+        return min(budget, max(pace, t_dc_i))

@@ -1,0 +1,245 @@
+"""Batched, memoized power/time prediction service.
+
+Algorithm 1 (paper §IV) re-predicts power & time for every queued job over
+the full clock ladder at every scheduling decision — O(jobs × clocks) model
+calls per tick. But the inputs are pure functions of the *application* (its
+profiled feature vector) and the *clock pair*: for a fixed trained predictor
+the whole per-app ladder table is immutable. This service precomputes it
+once per distinct app in one vectorized call and serves every subsequent
+decision from cache:
+
+* :meth:`table` — the full ``(P, T)`` ladder table for an app (predicted,
+  correlation-index indirection applied, memoized per resolved profile).
+* :meth:`t_min` / :meth:`t_dc` — cached point predictions at the max /
+  default clock (the queue-aware budget and virtual-pacing inputs).
+* :meth:`truth_table` / :meth:`true_t_min` / :meth:`true_t_dc` — the
+  ground-truth analogues for the oracle policy (memoized testbed sweeps).
+
+Large batches route through the Pallas one-hot-matmul GBDT kernel
+(:mod:`repro.kernels.gbdt_predict`); on hosts without a TPU the service
+falls back to the vectorized numpy path (bit-identical to calling the
+predictor directly), so results are reproducible everywhere. Set
+``use_kernel=True`` to force the kernel (interpret mode on CPU).
+
+:class:`ServiceStats` counts builds vs hits — the scheduling benchmarks
+assert at most one table build per distinct app.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .correlate import CorrelationIndex
+from .dvfs import ClockPair, DVFSConfig
+from .features import clock_features
+from .predictor import EnergyTimePredictor
+from .simulator import AppProfile, Testbed
+
+__all__ = ["ClockTable", "ServiceStats", "PredictionService"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClockTable:
+    """Immutable per-app ladder table: ``P[i]``/``T[i]`` at ``clocks[i]``."""
+
+    clocks: tuple[ClockPair, ...]
+    P: np.ndarray                 # predicted/true power (W) per clock
+    T: np.ndarray                 # predicted/true time (s) per clock
+    source: str = "predicted"     # "predicted" | "truth"
+
+    def __len__(self) -> int:
+        return len(self.clocks)
+
+    @property
+    def E(self) -> np.ndarray:
+        return self.P * self.T
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    table_builds: int = 0         # vectorized ladder-table constructions
+    table_hits: int = 0           # decisions served from cache
+    truth_builds: int = 0
+    truth_hits: int = 0
+    point_predictions: int = 0    # cached single-row t_min / t_dc predicts
+    rows_predicted: int = 0       # total predictor rows evaluated
+    kernel_batches: int = 0       # batches routed through the Pallas kernel
+
+    def summary(self) -> str:
+        return (f"table_builds={self.table_builds} hits={self.table_hits} "
+                f"truth_builds={self.truth_builds} "
+                f"rows={self.rows_predicted} kernel={self.kernel_batches}")
+
+
+def _tpu_available() -> bool:
+    try:
+        import jax
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+class PredictionService:
+    """Shared prediction layer for schedulers; safe to reuse across runs —
+    every cached quantity is a deterministic function of (predictor, app
+    profile, DVFS config)."""
+
+    def __init__(
+        self,
+        dvfs: DVFSConfig,
+        predictor: Optional[EnergyTimePredictor] = None,
+        app_features: Optional[dict[str, np.ndarray]] = None,
+        corr_index: Optional[CorrelationIndex] = None,
+        corr_features: Optional[dict[str, np.ndarray]] = None,
+        testbed: Optional[Testbed] = None,
+        use_kernel: bool | str = "auto",
+        kernel_min_rows: int = 512,
+    ):
+        self.dvfs = dvfs
+        self.predictor = predictor
+        self.app_features = app_features
+        self.corr_index = corr_index
+        self.corr_features = corr_features
+        self.testbed = testbed
+        self.use_kernel = use_kernel
+        self.kernel_min_rows = int(kernel_min_rows)
+        self.stats = ServiceStats()
+
+        self.clocks: tuple[ClockPair, ...] = tuple(dvfs.clock_list())
+        self._clock_X = [clock_features(c, dvfs) for c in self.clocks]
+        self._tables: dict[tuple, ClockTable] = {}
+        self._truth: dict[str, ClockTable] = {}
+        self._resolved: dict[str, tuple[tuple, np.ndarray]] = {}
+        self._tmin: dict[str, float] = {}
+        self._tdc: dict[str, float] = {}
+        self._true_tmin: dict[str, float] = {}
+        self._true_tdc: dict[str, float] = {}
+
+    # ------------------------------------------------------------------ #
+    @property
+    def has_predictor(self) -> bool:
+        return self.predictor is not None and self.app_features is not None
+
+    def resolve(self, name: str) -> tuple[tuple, np.ndarray]:
+        """Profile vector used to predict for ``name``: the app's own
+        default-clock profile, or — when a correlation index is configured —
+        the correlated exhaustively-profiled app's vector (paper §III-D)."""
+        hit = self._resolved.get(name)
+        if hit is not None:
+            return hit
+        feats = self.app_features[name]
+        key = ("own", name)
+        if self.corr_index is not None and self.corr_features is not None:
+            corr_name = self.corr_index.correlated(feats, exclude=name)
+            if corr_name in self.corr_features:
+                feats = self.corr_features[corr_name]
+                key = ("corr", corr_name)
+        self._resolved[name] = (key, feats)
+        return key, feats
+
+    # ------------------------------------------------------------------ #
+    #  Predicted tables
+    # ------------------------------------------------------------------ #
+    def table(self, name: str) -> ClockTable:
+        """Full-ladder ``(P, T)`` for app ``name`` — one build per distinct
+        resolved profile, every later call a cache hit."""
+        key, feats = self.resolve(name)
+        tab = self._tables.get(key)
+        if tab is not None:
+            self.stats.table_hits += 1
+            return tab
+        tab = self.table_for_features(feats)
+        self._tables[key] = tab
+        self.stats.table_builds += 1
+        return tab
+
+    def table_for_features(self, feats: np.ndarray) -> ClockTable:
+        """Uncached vectorized table build from a raw profile vector."""
+        X = np.stack([np.concatenate([feats, cx]) for cx in self._clock_X])
+        P = self._predict(self.predictor.power, X)
+        T = self._predict(self.predictor.time, X)
+        return ClockTable(clocks=self.clocks, P=P, T=T, source="predicted")
+
+    def _predict(self, target, X: np.ndarray) -> np.ndarray:
+        """One regressor over a batch; routes big GBDT batches to Pallas."""
+        self.stats.rows_predicted += X.shape[0]
+        use = self.use_kernel
+        if use == "auto":
+            use = (target.gbdt is not None
+                   and X.shape[0] >= self.kernel_min_rows
+                   and _tpu_available())
+        elif use:
+            use = target.gbdt is not None
+        if use:
+            self.stats.kernel_batches += 1
+            return self._kernel_predict(target, X)
+        return target.predict(X)
+
+    @staticmethod
+    def _kernel_predict(target, X: np.ndarray) -> np.ndarray:
+        from ..kernels import ops  # lazy: keeps core importable without jax
+        Xe = target.enc.transform(X) if target.enc is not None else X
+        raw = np.asarray(ops.gbdt_predict_model(target.gbdt, Xe),
+                         dtype=np.float64)
+        return target._decode_target(X, raw)
+
+    # ------------------------------------------------------------------ #
+    #  Point predictions (budget-manager inputs)
+    # ------------------------------------------------------------------ #
+    def _point_time(self, cache: dict, name: str, clock: ClockPair) -> float:
+        val = cache.get(name)
+        if val is None:
+            x = np.concatenate([self.app_features[name],
+                                clock_features(clock, self.dvfs)])
+            val = float(self.predictor.predict_time(x[None])[0])
+            cache[name] = val
+            self.stats.point_predictions += 1
+        return val
+
+    def t_min(self, name: str) -> float:
+        """Predicted max-clock ("sprint") time from the app's own profile."""
+        return self._point_time(self._tmin, name, self.dvfs.max_clock)
+
+    def t_dc(self, name: str) -> float:
+        """Predicted default-clock time from the app's own profile."""
+        return self._point_time(self._tdc, name, self.dvfs.default_clock)
+
+    # ------------------------------------------------------------------ #
+    #  Ground truth (oracle policy)
+    # ------------------------------------------------------------------ #
+    def _require_testbed(self) -> Testbed:
+        if self.testbed is None:
+            raise ValueError(
+                "PredictionService needs a testbed for ground-truth queries "
+                "(oracle policy / truth-based pacing)")
+        return self.testbed
+
+    def truth_table(self, app: AppProfile) -> ClockTable:
+        tab = self._truth.get(app.name)
+        if tab is not None:
+            self.stats.truth_hits += 1
+            return tab
+        tb = self._require_testbed()
+        T = np.array([tb.true_time(app, c) for c in self.clocks])
+        P = np.array([tb.true_power(app, c) for c in self.clocks])
+        tab = ClockTable(clocks=self.clocks, P=P, T=T, source="truth")
+        self._truth[app.name] = tab
+        self.stats.truth_builds += 1
+        return tab
+
+    def true_t_min(self, app: AppProfile) -> float:
+        val = self._true_tmin.get(app.name)
+        if val is None:
+            val = self._require_testbed().true_time(app, self.dvfs.max_clock)
+            self._true_tmin[app.name] = val
+        return val
+
+    def true_t_dc(self, app: AppProfile) -> float:
+        val = self._true_tdc.get(app.name)
+        if val is None:
+            val = self._require_testbed().true_time(app,
+                                                    self.dvfs.default_clock)
+            self._true_tdc[app.name] = val
+        return val

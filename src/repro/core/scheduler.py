@@ -1,6 +1,6 @@
 """Deadline-aware scheduling by data-driven DVFS (paper §IV, Algorithm 1).
 
-Policies:
+Policies (see :mod:`repro.core.policies` for the pluggable class registry):
 
 * ``dc`` — Default Clock baseline (paper's DC).
 * ``mc`` — Max Clock baseline (paper's MC, "computational sprinting").
@@ -48,70 +48,130 @@ i.e. a job may fall behind DC pace only by a ``slack_share`` fraction of its
 *own* deadline slack — bounding the delay it can impose on any future
 arrival. ``slack_share=1.0, virtual_pacing=False`` recovers pure Algorithm 1
 semantics.
+
+**Architecture (post-refactor).** :func:`run_schedule` is a thin wrapper
+wiring three composable layers:
+
+* :class:`~repro.core.prediction_service.PredictionService` — memoized,
+  vectorized per-app × clock-ladder tables (one build per distinct app
+  instead of O(jobs × clocks) predictor calls per decision);
+* :mod:`~repro.core.policies` — the policy registry + budget managers;
+* :class:`~repro.core.engine.EventEngine` — the streaming event core.
+
+The pre-refactor monolith is retained verbatim as
+:func:`legacy_run_schedule`: it is the executable specification the
+equivalence tests (tests/test_engine.py) hold the new stack to, and the
+baseline the large-scale benchmark measures the prediction cache against.
 """
 from __future__ import annotations
 
-import dataclasses
 import heapq
-from typing import Callable, Optional
+from typing import Optional
 
 import numpy as np
 
 from .correlate import CorrelationIndex
 from .dvfs import ClockPair, DVFSConfig
+from .engine import EngineHooks, EventEngine, ExecutionRecord, ScheduleResult
 from .features import clock_features
+from .policies import (POLICIES as _POLICY_REGISTRY, QueueAwareBudget,
+                       VirtualPacingBudget, resolve_policy)
+from .prediction_service import PredictionService
 from .predictor import EnergyTimePredictor
 from .simulator import AppProfile, Testbed
 from .workload import Job
 
-__all__ = ["ExecutionRecord", "ScheduleResult", "run_schedule", "POLICIES"]
+__all__ = [
+    "ExecutionRecord",
+    "ScheduleResult",
+    "run_schedule",
+    "legacy_run_schedule",
+    "POLICIES",
+]
 
-POLICIES = ("dc", "mc", "d-dvfs", "min-energy", "risk-aware", "oracle")
-
-
-@dataclasses.dataclass
-class ExecutionRecord:
-    job_id: int
-    name: str
-    arrival: float
-    deadline: float
-    start: float
-    end: float
-    device: int
-    clock: ClockPair
-    time_s: float
-    power_w: float
-    energy_j: float
-    predicted_time: float | None
-    predicted_power: float | None
-    met_deadline: bool
-    had_feasible_clock: bool
+#: Back-compat tuple of policy names (the registry itself lives in
+#: :mod:`repro.core.policies`).
+POLICIES = tuple(_POLICY_REGISTRY)
 
 
-@dataclasses.dataclass
-class ScheduleResult:
-    policy: str
-    records: list[ExecutionRecord]
+# ---------------------------------------------------------------------- #
+#  New composable path
+# ---------------------------------------------------------------------- #
+def run_schedule(
+    jobs: list[Job],
+    policy: str,
+    testbed: Testbed,
+    predictor: EnergyTimePredictor | None = None,
+    app_features: dict[str, np.ndarray] | None = None,
+    corr_index: CorrelationIndex | None = None,
+    corr_features: dict[str, np.ndarray] | None = None,
+    n_devices: int = 1,
+    risk_margin: float = 0.05,
+    queue_aware: bool = True,
+    virtual_pacing: bool = True,
+    slack_share: float = 0.2,
+    seed: int = 0,
+    service: PredictionService | None = None,
+    hooks: EngineHooks | None = None,
+) -> ScheduleResult:
+    """Event-driven schedule execution on the simulated testbed.
 
-    @property
-    def total_energy(self) -> float:
-        return sum(r.energy_j for r in self.records)
+    ``app_features``: per-job default-clock profile vectors (the new-app
+    profiling run). ``corr_index``/``corr_features``: when given, D-DVFS uses
+    the *correlated* application's exhaustive-profile features as prediction
+    input (the paper's §III-D indirection); otherwise the job's own
+    default-clock features are used.
 
-    @property
-    def misses(self) -> int:
-        return sum(not r.met_deadline for r in self.records)
+    ``service``: pass a shared :class:`PredictionService` to reuse its
+    memoized tables across many runs (benchmark sweeps, online serving);
+    when given, its predictor/app_features take precedence over the
+    ``predictor``/``app_features`` arguments. ``jobs`` may be any iterable
+    in nondecreasing arrival order — including a generator (streaming).
+    """
+    if policy not in _POLICY_REGISTRY:
+        raise ValueError(f"unknown policy {policy!r}; choose from {POLICIES}")
+    d = testbed.dvfs
+    if service is None:
+        service = PredictionService(
+            d, predictor=predictor, app_features=app_features,
+            corr_index=corr_index, corr_features=corr_features,
+            testbed=testbed)
+    predictor = service.predictor
+    app_features = service.app_features
+    if policy in ("d-dvfs", "min-energy", "risk-aware") and predictor is None:
+        raise ValueError(f"policy {policy!r} needs a fitted predictor")
 
-    @property
-    def makespan(self) -> float:
-        return max((r.end for r in self.records), default=0.0)
+    managers = []
+    if queue_aware and n_devices == 1:
+        # t_min source mirrors the legacy path: ground truth for the oracle,
+        # the predictor when available, otherwise no cap
+        if policy == "oracle":
+            managers.append(QueueAwareBudget(
+                lambda j: service.true_t_min(j.app)))
+        elif predictor is not None and app_features is not None:
+            managers.append(QueueAwareBudget(
+                lambda j: service.t_min(j.name)))
+    if virtual_pacing and policy not in ("dc", "mc") and n_devices == 1:
+        if policy == "oracle" or app_features is None or predictor is None:
+            t_dc = lambda j: service.true_t_dc(j.app)       # noqa: E731
+        else:
+            t_dc = lambda j: service.t_dc(j.name)           # noqa: E731
+        managers.append(VirtualPacingBudget(t_dc, slack_share=slack_share))
 
-    def energy_by_app(self) -> dict[str, float]:
-        out: dict[str, float] = {}
-        for r in self.records:
-            out[r.name] = out.get(r.name, 0.0) + r.energy_j
-        return out
+    engine = EventEngine(
+        testbed,
+        resolve_policy(policy, d, risk_margin=risk_margin),
+        service=service,
+        n_devices=n_devices,
+        budget_managers=managers,
+        hooks=hooks,
+        seed=seed,
+    )
+    return engine.run(jobs)
 
 
+# ---------------------------------------------------------------------- #
+#  Legacy monolith — executable specification for the refactored stack
 # ---------------------------------------------------------------------- #
 def _select_clock_paper(
     feats: np.ndarray,
@@ -163,8 +223,7 @@ def _select_clock_oracle(app: AppProfile, budget, clocks, testbed: Testbed):
     return best, testbed.true_power(app, best), testbed.true_time(app, best)
 
 
-# ---------------------------------------------------------------------- #
-def run_schedule(
+def legacy_run_schedule(
     jobs: list[Job],
     policy: str,
     testbed: Testbed,
@@ -179,13 +238,12 @@ def run_schedule(
     slack_share: float = 0.2,
     seed: int = 0,
 ) -> ScheduleResult:
-    """Event-driven schedule execution on the simulated testbed.
+    """The pre-refactor monolithic implementation, kept verbatim.
 
-    ``app_features``: per-job default-clock profile vectors (the new-app
-    profiling run). ``corr_index``/``corr_features``: when given, D-DVFS uses
-    the *correlated* application's exhaustive-profile features as prediction
-    input (the paper's §III-D indirection); otherwise the job's own
-    default-clock features are used.
+    O(jobs × clocks) predictor calls per decision and a full queue re-sort
+    per job — do not use for large workloads; use :func:`run_schedule`.
+    The equivalence tests assert the new stack reproduces this function's
+    records bit-for-bit for every policy.
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; choose from {POLICIES}")

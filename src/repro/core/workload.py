@@ -24,7 +24,7 @@ import numpy as np
 from .dvfs import DVFSConfig
 from .simulator import AppProfile, Testbed
 
-__all__ = ["Job", "make_workload"]
+__all__ = ["Job", "make_workload", "stream_workload"]
 
 
 @dataclasses.dataclass
@@ -71,3 +71,42 @@ def make_workload(
         jobs.append(Job(app=app, arrival=float(arr),
                         deadline=float(now + slack), job_id=jid))
     return jobs
+
+
+def stream_workload(
+    apps: list[AppProfile],
+    testbed: Testbed,
+    n_jobs: int = 1000,
+    seed: int = 0,
+    mean_interarrival: float | None = None,
+    slack_range: tuple[float, float] = (0.25, 1.0),
+    n_devices: int = 1,
+    utilization: float = 0.8,
+):
+    """Open-ended Poisson job stream — a *generator*, never materialized.
+
+    The large-scale / online-arrival path of the event engine: jobs are
+    yielded in nondecreasing arrival order, app sampled uniformly per job.
+    Deadlines follow :func:`make_workload`'s DC-anchoring, generalized to
+    ``n_devices``: a virtual default-clock schedule is advanced on the
+    earliest-free virtual device and the deadline is its completion plus a
+    uniform slack — so the fleet-wide DC baseline stays (approximately)
+    schedulable at the configured ``utilization`` (fraction of aggregate DC
+    throughput consumed by the arrival rate).
+    """
+    rng = np.random.default_rng(seed)
+    d: DVFSConfig = testbed.dvfs
+    t_dc = np.array([testbed.true_time(a, d.default_clock) for a in apps])
+    if mean_interarrival is None:
+        mean_interarrival = float(t_dc.mean()) / (n_devices * utilization)
+    dev_free = np.zeros(n_devices)
+    now = 0.0
+    for jid in range(n_jobs):
+        now += float(rng.exponential(mean_interarrival))
+        idx = int(rng.integers(len(apps)))
+        dev = int(np.argmin(dev_free))     # virtual DC dispatch
+        done = max(dev_free[dev], now) + t_dc[idx]
+        dev_free[dev] = done
+        slack = float(rng.uniform(*slack_range)) * t_dc[idx]
+        yield Job(app=apps[idx], arrival=now, deadline=float(done + slack),
+                  job_id=jid)

@@ -1,0 +1,1 @@
+"""Distributed-substrate utilities: fault tolerance and compressed collectives."""

@@ -265,8 +265,9 @@ def _build_jitted(cfg, shape, mesh, microbatches):
 
 
 def _compile(cfg, shape, mesh, microbatches):
+    from .mesh import set_mesh
     jitted, args = _build_jitted(cfg, shape, mesh, microbatches)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jitted.lower(*args)
         compiled = lowered.compile()
     return compiled
@@ -309,7 +310,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "fits_hbm": mem["total_bytes"] < 16e9,
         "memory_analysis": str(compiled.memory_analysis()),
         "cost_analysis_scanned": {
-            k: v for k, v in compiled.cost_analysis().items()
+            k: v for k, v in roofline.cost_analysis(compiled).items()
             if k in ("flops", "bytes accessed")},
     }
     if verbose:

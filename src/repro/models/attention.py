@@ -19,13 +19,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from .common import FSDP, TP, apply_rope, dense_init, dtype_of, maybe_shard
+from .common import (FSDP, TP, apply_rope, current_mesh, dense_init,
+                     dtype_of, maybe_shard)
 
 NEG_INF = -2.0 ** 30  # large-negative in fp32/bf16 without overflow
 
 
 def _tp_size() -> int:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is not None and TP in getattr(mesh, "shape", {}):
         return mesh.shape[TP]
     return 1

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from . import common
 from .common import FSDP, TP, dense_init, dtype_of, maybe_shard
 from .mlp import init_mlp, mlp, spec_mlp
 
@@ -54,7 +55,7 @@ def spec_moe(cfg):
 
 
 def _mesh_axes():
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = common.current_mesh()
     return set(mesh.axis_names) if mesh is not None else set()
 
 
@@ -78,7 +79,7 @@ def moe_sharded(p, x, cfg):
          (same collective shape as a dense TP MLP).
     """
     axes = _mesh_axes()
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = common.current_mesh()
     # batch sharding: largest ('pod','data') subset that divides B (decode
     # at batch 1 / long-context cells run with the batch replicated)
     dp = ()
@@ -178,8 +179,8 @@ def moe_sharded(p, x, cfg):
         in_specs += [P(None, TP), P(None, TP), P(TP, None)]
         args += [p["shared"]["w_gate"], p["shared"]["w_up"],
                  p["shared"]["w_down"]]
-    fn = jax.shard_map(
-        local, mesh=jax.sharding.get_abstract_mesh(),
+    fn = common.shard_map(
+        local, mesh=common.current_mesh(),
         in_specs=tuple(in_specs),
         out_specs=(bspec, P()),
         check_vma=False,
@@ -191,7 +192,7 @@ def moe(p, x, cfg):
     """x: (B, S, D) → (out (B, S, D), aux_loss scalar)."""
     axes = _mesh_axes()
     if TP in axes:
-        tp = jax.sharding.get_abstract_mesh().shape[TP]
+        tp = common.current_mesh().shape[TP]
         if cfg.n_experts % tp == 0 or cfg.resolved_moe_d_ff % tp == 0:
             return moe_sharded(p, x, cfg)  # E-sharded or F-sharded variant
     B, S, D = x.shape

@@ -1,0 +1,79 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The test suite uses a small, fixed subset of the hypothesis API:
+``@settings(max_examples=N, deadline=None)`` stacked on ``@given(**strategies)``
+with ``st.integers(lo, hi)`` / ``st.sampled_from(seq)`` strategies. This shim
+reproduces that subset with *deterministic* sampling (seeded numpy RNG), so
+property tests still exercise a spread of inputs on machines without the real
+library. Install ``hypothesis`` to get true shrinking/coverage; test modules
+import it preferentially:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import types
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sample_fn):
+        self._sample_fn = sample_fn
+
+    def sample(self, rng: np.random.Generator):
+        return self._sample_fn(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+
+strategies = types.SimpleNamespace(integers=_integers, sampled_from=_sampled_from)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    """Record the example budget on the decorated test (deadline etc. ignored)."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    """Run the test once per deterministically-sampled example tuple."""
+
+    def deco(fn):
+        # NB: deliberately NOT functools.wraps — pytest must see the (*args,
+        # **kwargs) signature, not the wrapped one, or it would try to inject
+        # the drawn parameters as fixtures.
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", None) or getattr(
+                fn, "_max_examples", None) or _DEFAULT_EXAMPLES
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

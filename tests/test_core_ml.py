@@ -1,7 +1,11 @@
 """Unit + property tests for the from-scratch ML core (GBDT, linear, K-means)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # not installed in this container — deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.gbdt import GBDTParams, OrderedTargetEncoder, fit_gbdt
 from repro.core.kmeans import KMeans, choose_k_elbow

@@ -2,7 +2,11 @@
 correlation, workload, and scheduler — including the paper's headline claims."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # not installed in this container — deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs.paper_suite import PAPER_APPS
 from repro.core import (

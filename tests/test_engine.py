@@ -1,0 +1,340 @@
+"""Tests for the service-oriented scheduling stack: PredictionService cache
+correctness, policy/budget-manager equivalence with the legacy monolith
+(bit-for-bit, every policy, multiple seeds), and EventEngine streaming +
+multi-device behavior."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_suite import PAPER_APPS
+from repro.core import (
+    CorrelationIndex, EnergyTimePredictor, EngineHooks, EventEngine,
+    PredictionService, PredictorConfig, Testbed, V5E_DVFS, build_dataset,
+    make_workload, profile_features, run_schedule, stream_workload,
+)
+from repro.core.features import clock_features
+from repro.core.gbdt import GBDTParams
+from repro.core.policies import (POLICIES, POLICY_NAMES, MinEnergy,
+                                 QueueAwareBudget, resolve_policy)
+from repro.core.scheduler import POLICIES as POLICY_TUPLE, legacy_run_schedule
+
+APPS = list(PAPER_APPS)[:8]   # subset keeps the fit fast; behavior-identical
+SMALL = PredictorConfig(
+    gbdt=GBDTParams(iterations=80, depth=3, learning_rate=0.15,
+                    l2_leaf_reg=5.0),
+    gbdt_time=GBDTParams(iterations=80, depth=3, learning_rate=0.15,
+                         l2_leaf_reg=3.0),
+)
+
+
+@pytest.fixture(scope="module")
+def testbed():
+    return Testbed(seed=0)
+
+
+@pytest.fixture(scope="module")
+def fitted(testbed):
+    X, yp, yt, _ = build_dataset(APPS, testbed, seed=0)
+    return EnergyTimePredictor(SMALL).fit(X, yp, yt)
+
+
+@pytest.fixture(scope="module")
+def app_feats(testbed):
+    rng = np.random.default_rng(7)
+    return {a.name: profile_features(a, testbed, rng=rng) for a in APPS}
+
+
+def _assert_identical(a, b):
+    assert a.policy == b.policy
+    assert len(a.records) == len(b.records)
+    for ra, rb in zip(a.records, b.records):
+        assert ra == rb, (ra, rb)
+
+
+# ---------------------------------------------------------------------- #
+#  Equivalence: new stack == legacy monolith, bit-for-bit
+# ---------------------------------------------------------------------- #
+class TestEquivalence:
+    def test_every_policy_every_seed(self, testbed, fitted, app_feats):
+        """All six policies, 3 seeds: identical ExecutionRecord streams."""
+        for pol, seed in itertools.product(POLICY_NAMES, range(3)):
+            jobs = make_workload(APPS, testbed, seed=seed)
+            kw = dict(predictor=fitted, app_features=app_feats)
+            a = legacy_run_schedule(jobs, pol, Testbed(seed=100 + seed), **kw)
+            b = run_schedule(jobs, pol, Testbed(seed=100 + seed), **kw)
+            _assert_identical(a, b)
+
+    def test_budget_manager_ablations(self, testbed, fitted, app_feats):
+        """queue_aware / virtual_pacing off-switches match legacy exactly."""
+        jobs = make_workload(APPS, testbed, seed=1)
+        variants = [
+            dict(queue_aware=False, virtual_pacing=False),
+            dict(queue_aware=True, virtual_pacing=False),
+            dict(queue_aware=False, virtual_pacing=True),
+            dict(queue_aware=True, virtual_pacing=True, slack_share=0.6),
+        ]
+        for kw in variants:
+            a = legacy_run_schedule(jobs, "d-dvfs", Testbed(seed=100),
+                                    predictor=fitted,
+                                    app_features=app_feats, **kw)
+            b = run_schedule(jobs, "d-dvfs", Testbed(seed=100),
+                             predictor=fitted, app_features=app_feats, **kw)
+            _assert_identical(a, b)
+
+    def test_with_correlation_index(self, testbed, fitted, app_feats):
+        """Paper §III-D indirection path: correlated features, same records."""
+        names = list(app_feats)
+        F = np.stack([app_feats[n] for n in names])
+        idx = CorrelationIndex(k=4, random_state=0).fit(names, F)
+        jobs = make_workload(APPS, testbed, seed=2)
+        kw = dict(predictor=fitted, app_features=app_feats, corr_index=idx,
+                  corr_features=app_feats)
+        a = legacy_run_schedule(jobs, "d-dvfs", Testbed(seed=100), **kw)
+        b = run_schedule(jobs, "d-dvfs", Testbed(seed=100), **kw)
+        _assert_identical(a, b)
+
+    def test_multi_device(self, testbed, fitted, app_feats):
+        for nd in (2, 4):
+            jobs = make_workload(APPS, testbed, seed=3)
+            kw = dict(predictor=fitted, app_features=app_feats, n_devices=nd)
+            a = legacy_run_schedule(jobs, "min-energy", Testbed(seed=100),
+                                    **kw)
+            b = run_schedule(jobs, "min-energy", Testbed(seed=100), **kw)
+            _assert_identical(a, b)
+
+    def test_no_predictor_baselines(self, testbed):
+        jobs = make_workload(APPS, testbed, seed=4)
+        for pol in ("dc", "mc"):
+            a = legacy_run_schedule(jobs, pol, Testbed(seed=100))
+            b = run_schedule(jobs, pol, Testbed(seed=100))
+            _assert_identical(a, b)
+
+    def test_shared_service_across_runs(self, testbed, fitted, app_feats):
+        """A reused service (warm caches) must not change results."""
+        service = PredictionService(V5E_DVFS, predictor=fitted,
+                                    app_features=app_feats, testbed=testbed)
+        for seed in range(2):
+            jobs = make_workload(APPS, testbed, seed=seed)
+            a = legacy_run_schedule(jobs, "min-energy", Testbed(seed=100),
+                                    predictor=fitted, app_features=app_feats)
+            b = run_schedule(jobs, "min-energy", Testbed(seed=100),
+                             service=service)
+            _assert_identical(a, b)
+        # warm reuse: one table build per distinct app across both runs
+        assert service.stats.table_builds <= len(APPS)
+        assert service.stats.table_hits > 0
+
+
+# ---------------------------------------------------------------------- #
+#  PredictionService
+# ---------------------------------------------------------------------- #
+class TestPredictionService:
+    def _service(self, fitted, app_feats, testbed=None, **kw):
+        return PredictionService(V5E_DVFS, predictor=fitted,
+                                 app_features=app_feats, testbed=testbed,
+                                 **kw)
+
+    def test_table_matches_direct_predictor(self, fitted, app_feats):
+        svc = self._service(fitted, app_feats)
+        name = APPS[0].name
+        tab = svc.table(name)
+        X = np.stack([
+            np.concatenate([app_feats[name], clock_features(c, V5E_DVFS)])
+            for c in V5E_DVFS.clock_list()
+        ])
+        np.testing.assert_array_equal(tab.P, fitted.predict_power(X))
+        np.testing.assert_array_equal(tab.T, fitted.predict_time(X))
+        assert len(tab) == len(V5E_DVFS.clock_list())
+
+    def test_one_build_per_app(self, fitted, app_feats):
+        svc = self._service(fitted, app_feats)
+        for _ in range(5):
+            for a in APPS:
+                svc.table(a.name)
+        assert svc.stats.table_builds == len(APPS)
+        assert svc.stats.table_hits == 4 * len(APPS)
+        # cached tables are the same object — no recompute, no copy
+        assert svc.table(APPS[0].name) is svc.table(APPS[0].name)
+
+    def test_point_predictions_match_direct(self, fitted, app_feats):
+        svc = self._service(fitted, app_feats)
+        name = APPS[1].name
+        for fn, clock in ((svc.t_min, V5E_DVFS.max_clock),
+                          (svc.t_dc, V5E_DVFS.default_clock)):
+            x = np.concatenate([app_feats[name],
+                                clock_features(clock, V5E_DVFS)])
+            assert fn(name) == float(fitted.predict_time(x[None])[0])
+            fn(name)   # second call: cached
+        assert svc.stats.point_predictions == 2
+
+    def test_truth_table_matches_testbed(self, fitted, app_feats, testbed):
+        svc = self._service(fitted, app_feats, testbed=testbed)
+        app = APPS[2]
+        tab = svc.truth_table(app)
+        assert tab.source == "truth"
+        for i, c in enumerate(tab.clocks):
+            assert tab.T[i] == testbed.true_time(app, c)
+            assert tab.P[i] == testbed.true_power(app, c)
+        svc.truth_table(app)
+        assert svc.stats.truth_builds == 1 and svc.stats.truth_hits == 1
+
+    def test_truth_without_testbed_raises(self, fitted, app_feats):
+        svc = self._service(fitted, app_feats, testbed=None)
+        with pytest.raises(ValueError, match="testbed"):
+            svc.truth_table(APPS[0])
+
+    def test_correlated_apps_share_tables(self, fitted, app_feats):
+        names = list(app_feats)
+        F = np.stack([app_feats[n] for n in names])
+        idx = CorrelationIndex(k=2, random_state=0).fit(names, F)
+        svc = PredictionService(V5E_DVFS, predictor=fitted,
+                                app_features=app_feats, corr_index=idx,
+                                corr_features=app_feats)
+        for n in names:
+            svc.table(n)
+        # every table key is a correlate; distinct correlates ≤ distinct apps
+        assert svc.stats.table_builds <= len(names)
+        for n in names:
+            key, feats = svc.resolve(n)
+            assert key[0] == "corr"
+            np.testing.assert_array_equal(feats, app_feats[key[1]])
+
+    def test_kernel_routing_matches_numpy(self, fitted, app_feats):
+        """Forced Pallas path (interpret on CPU) ≈ numpy reference."""
+        svc_np = self._service(fitted, app_feats, use_kernel=False)
+        svc_k = self._service(fitted, app_feats, use_kernel=True)
+        name = APPS[0].name
+        t_np, t_k = svc_np.table(name), svc_k.table(name)
+        assert svc_k.stats.kernel_batches == 2   # power + time
+        np.testing.assert_allclose(t_k.P, t_np.P, rtol=2e-4)
+        np.testing.assert_allclose(t_k.T, t_np.T, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------- #
+#  EventEngine
+# ---------------------------------------------------------------------- #
+class TestEventEngine:
+    def test_streaming_generator_matches_list(self, testbed, fitted,
+                                              app_feats):
+        """The engine consumes a generator lazily; results match the same
+        jobs materialized up front."""
+        def jobs_stream():
+            return stream_workload(APPS, testbed, n_jobs=60, seed=5,
+                                   n_devices=2)
+
+        materialized = list(jobs_stream())
+        kw = dict(predictor=fitted, app_features=app_feats, n_devices=2)
+        a = run_schedule(materialized, "min-energy", Testbed(seed=100), **kw)
+        b = run_schedule(jobs_stream(), "min-energy", Testbed(seed=100), **kw)
+        _assert_identical(a, b)
+        assert len(a.records) == 60
+
+    def test_out_of_order_stream_rejected(self, testbed):
+        jobs = list(stream_workload(APPS, testbed, n_jobs=5, seed=0))
+        jobs[2], jobs[4] = jobs[4], jobs[2]
+        with pytest.raises(ValueError, match="out of order"):
+            run_schedule(iter(jobs), "dc", Testbed(seed=0))
+
+    def test_multi_device_edf_dispatch(self, testbed, fitted, app_feats):
+        """8 devices: all jobs run once, per-device spans never overlap, EDF
+        respected among simultaneously-queued jobs, per-device clock state
+        tracked."""
+        jobs = list(stream_workload(APPS, testbed, n_jobs=120, seed=6,
+                                    n_devices=8))
+        service = PredictionService(V5E_DVFS, predictor=fitted,
+                                    app_features=app_feats, testbed=testbed)
+        engine = EventEngine(testbed, MinEnergy(V5E_DVFS), service=service,
+                             n_devices=8, seed=100)
+        r = engine.run(jobs)
+        assert sorted(x.job_id for x in r.records) == sorted(
+            j.job_id for j in jobs)
+        by_dev = {}
+        for x in r.records:
+            by_dev.setdefault(x.device, []).append(x)
+        assert len(by_dev) > 4      # the fleet actually spreads out
+        for recs in by_dev.values():
+            spans = sorted((x.start, x.end) for x in recs)
+            for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+                assert s2 >= e1 - 1e-9
+        # EDF among queued jobs (same check as the legacy suite)
+        recs = sorted(r.records, key=lambda x: x.start)
+        for dev_recs in by_dev.values():
+            dev_recs.sort(key=lambda x: x.start)
+            for a, b in zip(dev_recs, dev_recs[1:]):
+                if b.arrival <= a.start:
+                    assert a.deadline <= b.deadline + 1e-9
+        assert set(engine.device_clocks) == set(range(8))
+        assert all(c is not None for c in engine.device_clocks.values())
+
+    def test_hooks_fire_per_event(self, testbed, fitted, app_feats):
+        jobs = make_workload(APPS, testbed, seed=0)
+        events = {"admit": 0, "dispatch": 0, "complete": 0}
+        hooks = EngineHooks(
+            on_admit=lambda j, t: events.__setitem__(
+                "admit", events["admit"] + 1),
+            on_dispatch=lambda j, d, c, s: events.__setitem__(
+                "dispatch", events["dispatch"] + 1),
+            on_complete=lambda r: events.__setitem__(
+                "complete", events["complete"] + 1),
+        )
+        r = run_schedule(jobs, "min-energy", Testbed(seed=100),
+                         predictor=fitted, app_features=app_feats,
+                         hooks=hooks)
+        n = len(r.records)
+        assert events == {"admit": n, "dispatch": n, "complete": n}
+
+    def test_unknown_policy_raises(self, testbed):
+        with pytest.raises(ValueError, match="unknown policy"):
+            run_schedule([], "warp-speed", testbed)
+
+    def test_predictive_policy_needs_predictor(self, testbed):
+        with pytest.raises(ValueError, match="needs a fitted predictor"):
+            run_schedule([], "d-dvfs", testbed)
+
+    def test_registry_matches_scheduler_tuple(self):
+        assert POLICY_TUPLE == POLICY_NAMES == tuple(POLICIES)
+        for name in POLICY_NAMES:
+            assert resolve_policy(name, V5E_DVFS).name == name
+
+
+# ---------------------------------------------------------------------- #
+#  Budget managers
+# ---------------------------------------------------------------------- #
+class TestQueueAwareBudget:
+    def test_duplicate_job_objects(self, testbed, fitted, app_feats):
+        """The same Job object admitted twice (replayed workload) must not
+        corrupt the incremental EDF list — results still match legacy."""
+        jobs = make_workload(APPS[:4], testbed, seed=0)
+        doubled = jobs + jobs              # same objects, twice
+        kw = dict(predictor=fitted, app_features=app_feats)
+        a = legacy_run_schedule(doubled, "d-dvfs", Testbed(seed=100), **kw)
+        b = run_schedule(doubled, "d-dvfs", Testbed(seed=100), **kw)
+        _assert_identical(a, b)
+
+    def test_incremental_matches_bruteforce(self, testbed):
+        """Random admit/pop interleavings: the incremental EDF list computes
+        the same cap as re-sorting the queue (the legacy algorithm)."""
+        rng = np.random.default_rng(0)
+        jobs = list(stream_workload(APPS, testbed, n_jobs=40, seed=7))
+        tmin = {j.name: testbed.true_time(j.app, V5E_DVFS.max_clock)
+                for j in jobs}
+        mgr = QueueAwareBudget(lambda j: tmin[j.name])
+        mgr.reset()
+        queued, counter = [], 0
+        for j in jobs:
+            mgr.on_admit(j)
+            queued.append((j.deadline, counter, j))
+            counter += 1
+            if queued and rng.random() < 0.4:
+                k = int(rng.integers(len(queued)))
+                dl, c, popped = queued.pop(k)
+                mgr.on_pop(popped)
+            start = float(rng.uniform(0, 100))
+            budget0 = float(rng.uniform(10, 200))
+            got = mgr.apply(j, start, budget0)
+            want, cum = budget0, 0.0
+            for dl_j, _, job_j in sorted(queued):
+                cum += tmin[job_j.name]
+                want = min(want, dl_j - start - cum)
+            assert got == pytest.approx(want, abs=1e-12)
