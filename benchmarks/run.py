@@ -31,6 +31,8 @@ BENCHES = [
      "Fig. 12: prediction tracking"),
     ("beyond", "benchmarks.bench_beyond",
      "Beyond paper: oracle gap, multi-device, backlog, stragglers"),
+    ("online", "benchmarks.bench_online",
+     "Beyond paper: measurement feedback on a drifting stream"),
     ("kernels", "benchmarks.bench_kernels",
      "Kernel micro-benchmarks"),
     ("roofline", "benchmarks.bench_roofline",

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Docs link checker (CI gate): fail on broken *relative* links.
+
+Scans README.md and every markdown file under docs/ for inline links
+``[text](target)`` and reference definitions ``[ref]: target``. External
+links (http/https/mailto) are skipped; pure-anchor links (``#section``) are
+checked to exist as a heading in the same file; relative paths are resolved
+against the containing file and must exist on disk (an optional ``#anchor``
+suffix is checked against the target's headings when it is markdown).
+
+Exit 0 when clean, 1 with one line per broken link otherwise.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+INLINE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REFDEF = re.compile(r"^\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _anchors(md_path: pathlib.Path) -> set[str]:
+    """GitHub-style anchor slugs for every heading in a markdown file."""
+    try:
+        text = md_path.read_text(encoding="utf-8")
+    except OSError:
+        return set()
+    out = set()
+    for h in HEADING.findall(text):
+        slug = re.sub(r"[^\w\- ]", "", h.strip().lower())
+        out.add(re.sub(r"\s+", "-", slug.strip()))
+    return out
+
+
+def check_file(md: pathlib.Path) -> list[str]:
+    text = md.read_text(encoding="utf-8")
+    # strip fenced code blocks — diagrams/examples are not links
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    errors = []
+    targets = INLINE.findall(text) + REFDEF.findall(text)
+    for target in targets:
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, ...
+            continue
+        if target.startswith("#"):
+            if target[1:].lower() not in _anchors(md):
+                errors.append(f"{md.relative_to(ROOT)}: broken anchor "
+                              f"{target!r}")
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = (md.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md.relative_to(ROOT)}: missing file "
+                          f"{target!r}")
+        elif anchor and dest.suffix == ".md" \
+                and anchor.lower() not in _anchors(dest):
+            errors.append(f"{md.relative_to(ROOT)}: broken anchor "
+                          f"{target!r}")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("**/*.md"))
+    errors = []
+    for md in files:
+        if md.exists():
+            errors.extend(check_file(md))
+    if errors:
+        print("broken links:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"docs links OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

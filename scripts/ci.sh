@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
-# One-command gate for every PR: tier-1 tests + a fast scheduler benchmark
-# smoke (CPU / Pallas-interpret mode — no accelerator required).
+# One-command gate for every PR: tier-1 tests, docs link check, and fast
+# benchmark smokes (CPU / Pallas-interpret mode — no accelerator required).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -8,7 +8,13 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "=== tier-1: pytest ==="
 python -m pytest -x -q
 
+echo "=== docs: relative-link check ==="
+python scripts/check_docs_links.py
+
 echo "=== smoke: Fig. 7/8 energy benchmark ==="
 python -m benchmarks.run --only fig78
+
+echo "=== smoke: online measurement-feedback gate ==="
+python -m benchmarks.bench_online --smoke
 
 echo "=== ci.sh: all green ==="

@@ -11,13 +11,16 @@ from .features import (ALL_INPUT_NAMES, CATEGORICAL_FEATURES, FEATURE_NAMES,
 from .predictor import (EnergyTimePredictor, PredictorConfig, loocv_rmse,
                         normalized_rmse)
 from .correlate import CorrelationIndex
-from .workload import Job, make_workload, stream_workload
+from .workload import (Job, drift_profile, drifting_workload, make_workload,
+                       stream_workload)
 from .prediction_service import ClockTable, PredictionService, ServiceStats
-from .policies import (BudgetManager, Policy, QueueAwareBudget,
+from .policies import (BudgetManager, Policy, QueueAwareBudget, RiskAware,
                        VirtualPacingBudget, resolve_policy)
 from .engine import EngineHooks, EventEngine
 from .scheduler import (POLICIES, ScheduleResult, legacy_run_schedule,
                         run_schedule)
+from .online import (DriftConfig, DriftDetector, GBDTCorrector, Observation,
+                     ObservationStore, OnlineAdapter, RLSCorrector)
 
 __all__ = [
     "ClockPair", "DVFSConfig", "V5E_DVFS",
@@ -26,8 +29,12 @@ __all__ = [
     "build_dataset", "profile_features",
     "EnergyTimePredictor", "PredictorConfig", "loocv_rmse", "normalized_rmse",
     "CorrelationIndex", "Job", "make_workload", "stream_workload",
+    "drifting_workload", "drift_profile",
     "ClockTable", "PredictionService", "ServiceStats",
-    "BudgetManager", "Policy", "QueueAwareBudget", "VirtualPacingBudget",
+    "BudgetManager", "Policy", "QueueAwareBudget", "RiskAware",
+    "VirtualPacingBudget",
     "resolve_policy", "EngineHooks", "EventEngine",
     "POLICIES", "ScheduleResult", "run_schedule", "legacy_run_schedule",
+    "Observation", "ObservationStore", "RLSCorrector", "GBDTCorrector",
+    "DriftConfig", "DriftDetector", "OnlineAdapter",
 ]

@@ -16,9 +16,33 @@ The reusable heart of the scheduler, decomposed out of the original
 * **hooks** (:class:`EngineHooks`) for tracing every admit / dispatch /
   completion without touching scheduler code.
 
+* a **feedback sink** — an optional object with ``observe(record)`` (e.g.
+  :class:`~repro.core.online.OnlineAdapter`) called after every completion,
+  closing the measurement loop: observed (energy, time) flows back into the
+  prediction layer while the stream is still running.
+
 The event loop reproduces the legacy implementation decision-for-decision
 (and RNG-draw-for-RNG-draw), so results are bit-identical — verified by
 tests/test_engine.py against the retained ``legacy_run_schedule``.
+
+Invariants:
+
+* **Determinism.** All stochasticity comes from the single ``seed``-ed RNG
+  threaded into ``testbed.run``; one (time, power) draw pair per dispatched
+  job, in dispatch order. Anything that preserves the dispatch sequence
+  (hooks, feedback sinks that don't change predictions) preserves results
+  bit-for-bit.
+* **Frozen-path identity.** With ``feedback=None`` (the default) the engine
+  is byte-identical in behavior to the PR 1 engine; an attached
+  :class:`~repro.core.online.OnlineAdapter` with ``enabled=False`` — or one
+  holding zero observations — is likewise a no-op (equivalence-tested).
+* **Feedback causality.** ``feedback.observe`` is delivered in *simulated*
+  completion order, immediately before the first dispatch decision whose
+  start time is at or past the record's end (leftovers flush when the
+  stream drains). A measurement is therefore never visible to a decision
+  that happens earlier in simulated time — even with many devices, where a
+  job is *simulated* long before its end time. On one device this reduces
+  to: the correction learned from job *n* is visible to job *n+1*.
 """
 from __future__ import annotations
 
@@ -144,6 +168,7 @@ class EventEngine:
         budget_managers: Sequence[BudgetManager] = (),
         hooks: Optional[EngineHooks] = None,
         seed: int = 0,
+        feedback: Optional[object] = None,
     ):
         self.testbed = testbed
         self.policy = resolve_policy(policy, testbed.dvfs)
@@ -152,6 +177,7 @@ class EventEngine:
         self.budget_managers = list(budget_managers)
         self.hooks = hooks or EngineHooks()
         self.seed = seed
+        self.feedback = feedback
         self.device_clocks: dict[int, Optional[ClockPair]] = {}
         if self.policy.table_kind != "none" and service is None:
             raise ValueError(
@@ -184,6 +210,12 @@ class EventEngine:
         counter = 0
         records: list[ExecutionRecord] = []
         d = self.testbed.dvfs
+        # completions whose simulated end time has not been reached yet —
+        # feedback must not see a measurement before it exists in simulated
+        # time (on one device that is always the case; with many devices a
+        # job can *finish being simulated* long before its end time)
+        fb_pending: list[tuple[float, int, ExecutionRecord]] = []
+        fb_seq = 0
 
         while not stream.exhausted or queue:
             free_t, dev = heapq.heappop(free)
@@ -209,6 +241,9 @@ class EventEngine:
             for bm in self.budget_managers:
                 bm.on_pop(job)
             start = max(free_t, job.arrival)
+            # deliver every measurement completed by this decision's time
+            while fb_pending and fb_pending[0][0] <= start + 1e-12:
+                self.feedback.observe(heapq.heappop(fb_pending)[2])
             budget = job.deadline - start
             for bm in self.budget_managers:
                 budget = bm.apply(job, start, budget)
@@ -235,6 +270,11 @@ class EventEngine:
             records.append(rec)
             if self.hooks.on_complete:
                 self.hooks.on_complete(rec)
+            if self.feedback is not None:
+                heapq.heappush(fb_pending, (end, fb_seq, rec))
+                fb_seq += 1
             heapq.heappush(free, (end, dev))
 
+        while fb_pending:                  # stream drained: flush the rest
+            self.feedback.observe(heapq.heappop(fb_pending)[2])
         return ScheduleResult(policy=self.policy.name, records=records)

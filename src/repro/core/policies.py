@@ -26,6 +26,26 @@ queue admissions/removals and cap the budget at decision time:
 
 Both produce budgets identical to the legacy path (asserted by the
 equivalence tests in tests/test_engine.py).
+
+**Extending the registry** — the recipe the registry contract guarantees:
+
+1. subclass :class:`Policy`, set a unique ``name`` and the ``table_kind``
+   you need (``"predicted"`` / ``"truth"`` / ``"none"``);
+2. implement ``select_clock(job, budget, table)`` returning a
+   :class:`ClockSelection` (``clock=None`` means "no feasible clock" — the
+   engine sprints at max clock and flags the job, it never drops work);
+3. add the class to :data:`POLICIES` (statically below, or by mutating the
+   dict at runtime for experiments). ``resolve_policy`` and the engine pick
+   it up by name; nothing else needs changing.
+
+Invariants: policies are stateless between jobs (all cross-job state lives
+in budget managers or the prediction service); they never call the
+predictor directly — the ``table`` argument is their only view of
+predictions, which is what lets the online correction layer transparently
+upgrade every predictive policy at once. :class:`RiskAware` additionally
+accepts a per-app ``margin_fn`` (e.g. ``OnlineAdapter.margin``) so its
+deadline insurance scales with *observed* residual variance instead of a
+fixed guess.
 """
 from __future__ import annotations
 
@@ -141,8 +161,11 @@ class MinEnergy(Policy):
     table_kind = "predicted"
     margin: float = 0.0
 
+    def _margin_for(self, job: Job) -> float:
+        return self.margin
+
     def select_clock(self, job, budget, table):
-        T_guard = table.T * (1.0 + self.margin)
+        T_guard = table.T * (1.0 + self._margin_for(job))
         feasible = T_guard <= budget
         if not feasible.any():
             return ClockSelection(None)
@@ -154,13 +177,26 @@ class MinEnergy(Policy):
 
 class RiskAware(MinEnergy):
     """Min-energy with the time estimate inflated by ``margin`` — insurance
-    against predictor underestimates (deadline risk)."""
+    against predictor underestimates (deadline risk).
+
+    ``margin_fn`` (optional) adds a *per-app* margin on top of the static
+    one; wire it to :meth:`repro.core.online.OnlineAdapter.margin` and the
+    insurance tracks each app's observed residual variance: tight for apps
+    the corrector predicts well, generous for noisy or recently-drifted
+    ones."""
 
     name = "risk-aware"
 
-    def __init__(self, dvfs: DVFSConfig, margin: float = 0.05):
+    def __init__(self, dvfs: DVFSConfig, margin: float = 0.05,
+                 margin_fn: Optional[Callable[[str], float]] = None):
         super().__init__(dvfs)
         self.margin = float(margin)
+        self.margin_fn = margin_fn
+
+    def _margin_for(self, job: Job) -> float:
+        if self.margin_fn is None:
+            return self.margin
+        return self.margin + float(self.margin_fn(job.name))
 
 
 class Oracle(Policy):

@@ -23,6 +23,30 @@ predictor directly), so results are reproducible everywhere. Set
 
 :class:`ServiceStats` counts builds vs hits — the scheduling benchmarks
 assert at most one table build per distinct app.
+
+**Online correction layer (PR 2).** An attached corrector (see
+:mod:`repro.core.online`) multiplies measurement-feedback scale factors onto
+the frozen base table. The base cache is never touched by feedback; the
+corrected view lives in a separate per-app cache with an explicit
+:meth:`invalidate` API the feedback loop calls when corrections change.
+
+Invariants (the contracts tests/test_online.py and tests/test_engine.py pin):
+
+* **Cache-key contract.** Base tables are keyed by the *resolved profile*
+  (``("own", name)`` or ``("corr", correlated_name)`` — see
+  :meth:`resolve`), so correlated apps share one build. Every cached base
+  quantity (tables, ``t_min``/``t_dc`` points, truth sweeps) is a pure
+  function of ``(predictor, app profile, DVFS config)`` and therefore never
+  invalidates: a service may be reused across runs indefinitely.
+* **Corrected tables are keyed by app name** (corrections are per-app even
+  when base tables are shared via correlation) and invalidate only through
+  :meth:`invalidate` — after which the next :meth:`table` call re-applies
+  the corrector's *current* correction to the cached base (no predictor
+  re-run). A served corrected table always reflects every observation up to
+  the most recent invalidation of that app.
+* **Frozen-path identity.** With no corrector attached — or an attached
+  corrector holding zero observations (its scale is exactly ``exp(0)``) —
+  :meth:`table` output is bit-identical to the pre-feedback service.
 """
 from __future__ import annotations
 
@@ -66,11 +90,17 @@ class ServiceStats:
     point_predictions: int = 0    # cached single-row t_min / t_dc predicts
     rows_predicted: int = 0       # total predictor rows evaluated
     kernel_batches: int = 0       # batches routed through the Pallas kernel
+    corrected_builds: int = 0     # corrected-view (re)applications
+    corrected_hits: int = 0       # decisions served from the corrected cache
+    invalidations: int = 0        # targeted corrected-cache invalidations
 
     def summary(self) -> str:
         return (f"table_builds={self.table_builds} hits={self.table_hits} "
                 f"truth_builds={self.truth_builds} "
-                f"rows={self.rows_predicted} kernel={self.kernel_batches}")
+                f"rows={self.rows_predicted} kernel={self.kernel_batches} "
+                f"corrected={self.corrected_builds}"
+                f"/{self.corrected_hits}hit "
+                f"invalidations={self.invalidations}")
 
 
 def _tpu_available() -> bool:
@@ -109,13 +139,15 @@ class PredictionService:
 
         self.clocks: tuple[ClockPair, ...] = tuple(dvfs.clock_list())
         self._clock_X = [clock_features(c, dvfs) for c in self.clocks]
+        self._corrector = None
+        self._corrected: dict[str, ClockTable] = {}
         self._tables: dict[tuple, ClockTable] = {}
-        self._truth: dict[str, ClockTable] = {}
+        self._truth: dict[AppProfile, ClockTable] = {}
         self._resolved: dict[str, tuple[tuple, np.ndarray]] = {}
         self._tmin: dict[str, float] = {}
         self._tdc: dict[str, float] = {}
-        self._true_tmin: dict[str, float] = {}
-        self._true_tdc: dict[str, float] = {}
+        self._true_tmin: dict[AppProfile, float] = {}
+        self._true_tdc: dict[AppProfile, float] = {}
 
     # ------------------------------------------------------------------ #
     @property
@@ -142,9 +174,10 @@ class PredictionService:
     # ------------------------------------------------------------------ #
     #  Predicted tables
     # ------------------------------------------------------------------ #
-    def table(self, name: str) -> ClockTable:
-        """Full-ladder ``(P, T)`` for app ``name`` — one build per distinct
-        resolved profile, every later call a cache hit."""
+    def base_table(self, name: str) -> ClockTable:
+        """Frozen-predictor ladder ``(P, T)`` for app ``name`` — one build
+        per distinct resolved profile, every later call a cache hit. Never
+        affected by the online correction layer."""
         key, feats = self.resolve(name)
         tab = self._tables.get(key)
         if tab is not None:
@@ -154,6 +187,58 @@ class PredictionService:
         self._tables[key] = tab
         self.stats.table_builds += 1
         return tab
+
+    def table(self, name: str) -> ClockTable:
+        """The table scheduling decisions consume: the frozen base table,
+        with the attached corrector's current per-app corrections applied
+        (cached until :meth:`invalidate`). Without a corrector this *is*
+        :meth:`base_table`."""
+        base = self.base_table(name)
+        if self._corrector is None:
+            return base
+        tab = self._corrected.get(name)
+        if tab is not None:
+            self.stats.corrected_hits += 1
+            return tab
+        P, T = self._corrector.correct(name, base.clocks, base.P, base.T)
+        tab = ClockTable(clocks=base.clocks, P=P, T=T, source="corrected")
+        self._corrected[name] = tab
+        self.stats.corrected_builds += 1
+        return tab
+
+    # ------------------------------------------------------------------ #
+    #  Online correction layer
+    # ------------------------------------------------------------------ #
+    def attach_corrector(self, corrector) -> None:
+        """Attach a correction provider (``correct(name, clocks, P, T) →
+        (P', T')``, see :mod:`repro.core.online`). Any previously cached
+        corrected views are dropped; base caches are untouched."""
+        self._corrector = corrector
+        self._corrected.clear()
+
+    def detach_corrector(self) -> None:
+        """Remove the correction layer — the service reverts bit-identically
+        to the frozen path."""
+        self._corrector = None
+        self._corrected.clear()
+
+    @property
+    def corrector(self):
+        return self._corrector
+
+    def invalidate(self, name: Optional[str] = None) -> int:
+        """Targeted corrected-cache invalidation: drop app ``name``'s
+        corrected table (all apps when ``name`` is None) so the next
+        :meth:`table` call re-applies the corrector's current correction to
+        the cached base. Returns the number of entries dropped. Base tables
+        are pure functions of frozen inputs and are deliberately *not*
+        invalidatable."""
+        self.stats.invalidations += 1
+        if name is None:
+            n = len(self._corrected)
+            self._corrected.clear()
+            return n
+        return 0 if self._corrected.pop(name, None) is None else 1
 
     def table_for_features(self, feats: np.ndarray) -> ClockTable:
         """Uncached vectorized table build from a raw profile vector."""
@@ -217,7 +302,10 @@ class PredictionService:
         return self.testbed
 
     def truth_table(self, app: AppProfile) -> ClockTable:
-        tab = self._truth.get(app.name)
+        # keyed by the (frozen, hashable) profile itself, NOT app.name: a
+        # drifted workload reuses the name with shifted coefficients, and
+        # the oracle must see the *current* truth (it is an upper bound).
+        tab = self._truth.get(app)
         if tab is not None:
             self.stats.truth_hits += 1
             return tab
@@ -225,21 +313,21 @@ class PredictionService:
         T = np.array([tb.true_time(app, c) for c in self.clocks])
         P = np.array([tb.true_power(app, c) for c in self.clocks])
         tab = ClockTable(clocks=self.clocks, P=P, T=T, source="truth")
-        self._truth[app.name] = tab
+        self._truth[app] = tab
         self.stats.truth_builds += 1
         return tab
 
     def true_t_min(self, app: AppProfile) -> float:
-        val = self._true_tmin.get(app.name)
+        val = self._true_tmin.get(app)
         if val is None:
             val = self._require_testbed().true_time(app, self.dvfs.max_clock)
-            self._true_tmin[app.name] = val
+            self._true_tmin[app] = val
         return val
 
     def true_t_dc(self, app: AppProfile) -> float:
-        val = self._true_tdc.get(app.name)
+        val = self._true_tdc.get(app)
         if val is None:
             val = self._require_testbed().true_time(app,
                                                     self.dvfs.default_clock)
-            self._true_tdc[app.name] = val
+            self._true_tdc[app] = val
         return val

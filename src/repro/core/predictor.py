@@ -37,10 +37,16 @@ ModelName = Literal["catboost", "xgboost", "lr", "lasso", "svr", "ridge"]
 @dataclasses.dataclass(frozen=True)
 class PredictorConfig:
     model: ModelName = "catboost"
-    gbdt: GBDTParams = GBDTParams(iterations=400, depth=4, learning_rate=0.1,
-                                  l2_leaf_reg=5.0)
-    gbdt_time: GBDTParams = GBDTParams(iterations=400, depth=4,
-                                       learning_rate=0.1, l2_leaf_reg=3.0)
+    # default_factory, NOT a shared default instance: a single module-level
+    # GBDTParams would be aliased by every PredictorConfig, so mutating it
+    # (object.__setattr__, __dict__ pokes in experiments) would leak across
+    # configs (regression-tested in tests/test_core_ml.py).
+    gbdt: GBDTParams = dataclasses.field(
+        default_factory=lambda: GBDTParams(
+            iterations=400, depth=4, learning_rate=0.1, l2_leaf_reg=5.0))
+    gbdt_time: GBDTParams = dataclasses.field(
+        default_factory=lambda: GBDTParams(
+            iterations=400, depth=4, learning_rate=0.1, l2_leaf_reg=3.0))
     log_time: bool = True
     lasso_alpha: float = 0.01
     ridge_alpha: float = 1.0

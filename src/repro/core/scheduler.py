@@ -74,8 +74,8 @@ from .correlate import CorrelationIndex
 from .dvfs import ClockPair, DVFSConfig
 from .engine import EngineHooks, EventEngine, ExecutionRecord, ScheduleResult
 from .features import clock_features
-from .policies import (POLICIES as _POLICY_REGISTRY, QueueAwareBudget,
-                       VirtualPacingBudget, resolve_policy)
+from .policies import (POLICIES as _POLICY_REGISTRY, Policy,
+                       QueueAwareBudget, VirtualPacingBudget, resolve_policy)
 from .prediction_service import PredictionService
 from .predictor import EnergyTimePredictor
 from .simulator import AppProfile, Testbed
@@ -99,7 +99,7 @@ POLICIES = tuple(_POLICY_REGISTRY)
 # ---------------------------------------------------------------------- #
 def run_schedule(
     jobs: list[Job],
-    policy: str,
+    policy: "str | Policy",
     testbed: Testbed,
     predictor: EnergyTimePredictor | None = None,
     app_features: dict[str, np.ndarray] | None = None,
@@ -113,6 +113,7 @@ def run_schedule(
     seed: int = 0,
     service: PredictionService | None = None,
     hooks: EngineHooks | None = None,
+    feedback: object | None = None,
 ) -> ScheduleResult:
     """Event-driven schedule execution on the simulated testbed.
 
@@ -127,10 +128,22 @@ def run_schedule(
     when given, its predictor/app_features take precedence over the
     ``predictor``/``app_features`` arguments. ``jobs`` may be any iterable
     in nondecreasing arrival order — including a generator (streaming).
+
+    ``feedback``: an object with ``observe(record)`` — typically an
+    :class:`~repro.core.online.OnlineAdapter` attached to ``service`` —
+    called after every completion (measurement-feedback loop). ``None``
+    (default) keeps the frozen, bit-identical-to-legacy path.
     """
-    if policy not in _POLICY_REGISTRY:
-        raise ValueError(f"unknown policy {policy!r}; choose from {POLICIES}")
+    if isinstance(policy, Policy):
+        pol, policy = policy, policy.name
+    else:
+        if policy not in _POLICY_REGISTRY:
+            raise ValueError(
+                f"unknown policy {policy!r}; choose from {POLICIES}")
+        pol = None
     d = testbed.dvfs
+    if pol is None:
+        pol = resolve_policy(policy, d, risk_margin=risk_margin)
     if service is None:
         service = PredictionService(
             d, predictor=predictor, app_features=app_features,
@@ -160,12 +173,13 @@ def run_schedule(
 
     engine = EventEngine(
         testbed,
-        resolve_policy(policy, d, risk_margin=risk_margin),
+        pol,
         service=service,
         n_devices=n_devices,
         budget_managers=managers,
         hooks=hooks,
         seed=seed,
+        feedback=feedback,
     )
     return engine.run(jobs)
 

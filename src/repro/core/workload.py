@@ -24,7 +24,8 @@ import numpy as np
 from .dvfs import DVFSConfig
 from .simulator import AppProfile, Testbed
 
-__all__ = ["Job", "make_workload", "stream_workload"]
+__all__ = ["Job", "make_workload", "stream_workload", "drifting_workload",
+           "drift_profile"]
 
 
 @dataclasses.dataclass
@@ -110,3 +111,76 @@ def stream_workload(
         slack = float(rng.uniform(*slack_range)) * t_dc[idx]
         yield Job(app=apps[idx], arrival=now, deadline=float(done + slack),
                   job_id=jid)
+
+
+#: Default drift: a **bottleneck flip** — the app's compute shrinks while
+#: its memory traffic grows (think: a new input format, or an autotuned
+#: kernel that trades FLOPs for HBM traffic). Total default-clock time stays
+#: in the same ballpark, but the *shape* of the time-vs-clock response
+#: inverts: the true optimum moves from high-core/low-mem clocks to
+#: low-core/high-mem ones. A frozen predictor keeps paying for core
+#: frequency the app no longer uses — the worst case for offline DVFS and
+#: exactly what measurement feedback can recover.
+DEFAULT_DRIFT: dict[str, float] = {
+    "flops": 0.3, "hbm_bytes": 1.55,
+}
+
+
+def drift_profile(app: AppProfile, factors: dict[str, float]) -> AppProfile:
+    """A copy of ``app`` with the given numeric fields scaled
+    multiplicatively (same ``name`` — downstream feature lookups and
+    deadlines keep using the stale offline profile, which is the point)."""
+    return dataclasses.replace(
+        app, **{k: getattr(app, k) * v for k, v in factors.items()})
+
+
+def drifting_workload(
+    apps: list[AppProfile],
+    testbed: Testbed,
+    n_jobs: int = 1000,
+    seed: int = 0,
+    drift_names: list[str] | None = None,
+    drift_at_frac: float = 0.4,
+    drift: dict[str, float] | None = None,
+    **stream_kw,
+):
+    """:func:`stream_workload` where some apps' *true* coefficients shift
+    mid-stream (the online-adaptation stress case).
+
+    After the first ``drift_at_frac`` fraction of the stream, every job of
+    an app in ``drift_names`` (default: the first app) carries a
+    :func:`drift_profile`-modified ``AppProfile`` — same name, shifted
+    ground truth. The offline predictor, profiled features, and the
+    DC-anchored deadlines are all computed from the *pre-drift* profile, so
+    a frozen scheduler keeps consuming stale predictions while a
+    measurement-feedback scheduler can re-learn the shift from completions.
+    Arrivals, app sequence, and deadlines are identical to the undrifted
+    stream (same ``seed``), making frozen-vs-corrected runs exactly paired.
+
+    ``drift`` is either one ``{field: factor}`` dict applied to every
+    drifting app, or a per-app ``{app_name: {field: factor}}`` mapping
+    (drift_names then defaults to its keys).
+    """
+    factors = DEFAULT_DRIFT if drift is None else drift
+    per_app = factors and all(isinstance(v, dict) for v in factors.values())
+    if drift_names is None:
+        drift_names = list(factors) if per_app else [apps[0].name]
+    if per_app:
+        unspecified = set(drift_names) - set(factors)
+        if unspecified:
+            raise ValueError("drift_names missing from the per-app drift "
+                             f"spec: {sorted(unspecified)}")
+    drifted = {
+        a.name: drift_profile(
+            a, factors[a.name] if per_app else factors)
+        for a in apps if a.name in drift_names
+    }
+    unknown = set(drift_names) - set(drifted)
+    if unknown:
+        raise ValueError(f"drift_names not in apps: {sorted(unknown)}")
+    cut = int(n_jobs * drift_at_frac)
+    for i, job in enumerate(stream_workload(apps, testbed, n_jobs=n_jobs,
+                                            seed=seed, **stream_kw)):
+        if i >= cut and job.name in drifted:
+            job = dataclasses.replace(job, app=drifted[job.name])
+        yield job

@@ -181,3 +181,23 @@ class TestKMeans:
         X = np.concatenate(blobs)
         k = choose_k_elbow(X, k_max=8)
         assert 3 <= k <= 5
+
+
+class TestPredictorConfigDefaults:
+    def test_gbdt_defaults_not_shared_between_configs(self):
+        """Regression (PR 2): the gbdt/gbdt_time defaults used to be a
+        single shared GBDTParams instance; poking one config's params
+        (object.__setattr__ through the frozen guard, as tuning scripts do)
+        would leak into every other default-constructed config."""
+        from repro.core.predictor import PredictorConfig
+
+        c1, c2 = PredictorConfig(), PredictorConfig()
+        assert c1.gbdt == c2.gbdt and c1.gbdt_time == c2.gbdt_time
+        assert c1.gbdt is not c2.gbdt
+        assert c1.gbdt_time is not c2.gbdt_time
+        assert c1.gbdt is not c1.gbdt_time
+
+        object.__setattr__(c1.gbdt, "iterations", 9999)
+        assert c2.gbdt.iterations == 400
+        object.__setattr__(c1.gbdt_time, "l2_leaf_reg", -1.0)
+        assert c2.gbdt_time.l2_leaf_reg == 3.0

@@ -125,6 +125,31 @@ class TestEquivalence:
         assert service.stats.table_builds <= len(APPS)
         assert service.stats.table_hits > 0
 
+    def test_feedback_disabled_still_identical(self, testbed, fitted,
+                                               app_feats):
+        """PR 2 frozen-path guarantee: a service with an attached (but
+        observation-free) corrector AND a disabled OnlineAdapter feedback
+        sink must reproduce the legacy monolith bit-for-bit."""
+        from repro.core import ObservationStore, OnlineAdapter, RLSCorrector
+        jobs = make_workload(APPS, testbed, seed=5)
+        kw = dict(predictor=fitted, app_features=app_feats)
+        a = legacy_run_schedule(jobs, "min-energy", Testbed(seed=100), **kw)
+
+        service = PredictionService(V5E_DVFS, predictor=fitted,
+                                    app_features=app_feats, testbed=testbed)
+        service.attach_corrector(RLSCorrector(ObservationStore()))
+        b = run_schedule(jobs, "min-energy", Testbed(seed=100),
+                         service=service)
+        _assert_identical(a, b)
+
+        service2 = PredictionService(V5E_DVFS, predictor=fitted,
+                                     app_features=app_feats, testbed=testbed)
+        adapter = OnlineAdapter(service2, enabled=False)
+        c = run_schedule(jobs, "min-energy", Testbed(seed=100),
+                         service=service2, feedback=adapter)
+        _assert_identical(a, c)
+        assert adapter.n_observed == 0
+
 
 # ---------------------------------------------------------------------- #
 #  PredictionService
