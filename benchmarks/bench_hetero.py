@@ -1,0 +1,228 @@
+"""Heterogeneous device-class cluster benchmark (beyond paper).
+
+The paper schedules a single homogeneous P100; its conclusion — and the
+follow-on heterogeneous-cluster literature (Mei et al., arXiv:2104.00486) —
+points at mixed pools where *placement and clock must be decided jointly*.
+This scenario streams a 1000-job workload onto an 8-device pool mixing
+three device classes (2x v5p big/efficient, 4x v5e baseline, 2x v5lite
+small/low-power) and compares:
+
+* **mixed** — the class-aware joint (device, clock) policy on the real
+  pool;
+* **single-class baselines** — the *same job stream* replayed on uniform
+  8-device pools of each class (deadlines stay anchored to the mixed
+  pool, so the comparison is exactly paired);
+* **random placement** — same mixed pool, same per-class clock selection,
+  but the device class is drawn uniformly from the co-free candidates
+  (ablates the placement half of the joint decision).
+
+The predictor is trained on the union of per-class profiling campaigns
+(each app profiled and swept once per class — the paper's protocol,
+repeated per generation), so one model serves every class; tables are
+cached per (app, class) by the PredictionService.
+
+Claims printed (and asserted — the CI gate):
+
+* mixed-pool energy <= the worst single-class pool's energy, with no
+  additional deadline misses;
+* with per-class idle power included (``DeviceClass.idle_power_w`` over
+  the makespan — the fleet-level bill), the mixed pool still beats the
+  worst single-class pool;
+* joint placement beats random placement on energy;
+* every device class actually receives work.
+
+``--smoke`` runs a reduced copy (8 apps, small GBDT, 150 jobs) as the fast
+CI gate; the full run uses 12 apps, the paper-size GBDT, and 1000 jobs.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import csv
+from repro.configs.paper_suite import PAPER_APPS
+from repro.core import (EnergyTimePredictor, PredictionService,
+                        PredictorConfig, RiskAware, Testbed, V5E_CLASS,
+                        V5E_DVFS, V5LITE_CLASS, V5P_CLASS, build_dataset,
+                        heterogeneous_workload, make_device_pool,
+                        profile_features, run_schedule)
+from repro.core.gbdt import GBDTParams
+
+CLASSES = (V5P_CLASS, V5E_CLASS, V5LITE_CLASS)
+POOL_SPEC = ((V5P_CLASS, 2), (V5E_CLASS, 4), (V5LITE_CLASS, 2))
+
+_SMALL = PredictorConfig(
+    gbdt=GBDTParams(iterations=80, depth=3, learning_rate=0.15,
+                    l2_leaf_reg=5.0),
+    gbdt_time=GBDTParams(iterations=80, depth=3, learning_rate=0.15,
+                         l2_leaf_reg=3.0))
+
+
+class RandomPlacement(RiskAware):
+    """Ablation: keep the per-class clock choice but pick the device class
+    uniformly at random among the co-free candidates (seeded — runs are
+    reproducible)."""
+
+    name = "random-place"
+
+    def __init__(self, dvfs, margin: float = 0.05, seed: int = 0):
+        super().__init__(dvfs, margin=margin)
+        self._rng = np.random.default_rng(seed)
+
+    def select_device_clock(self, job, candidates):
+        i = int(self._rng.integers(len(candidates)))
+        cand = candidates[i]
+        return i, self.select_for_class(job, cand.budget, cand.table,
+                                        dvfs=cand.dvfs)
+
+
+def hetero_fixtures(smoke: bool) -> dict:
+    """Per-class profiling campaign + one predictor over the union."""
+    t0 = time.time()
+    apps = list(PAPER_APPS)[:8] if smoke else list(PAPER_APPS)
+    cfg = _SMALL if smoke else PredictorConfig()
+    testbed = Testbed(seed=0)          # dvfs passed per call for classes
+    class_features: dict[str, dict[str, np.ndarray]] = {}
+    Xs, yps, yts = [], [], []
+    for ci, cls in enumerate(CLASSES):
+        tb_cls = Testbed(dvfs=cls.dvfs, seed=0)
+        rng = np.random.default_rng(7 + ci)
+        feats = {a.name: profile_features(a, tb_cls, rng=rng) for a in apps}
+        class_features[cls.name] = feats
+        X, yp, yt, _ = build_dataset(apps, tb_cls, seed=ci,
+                                     app_features=feats)
+        Xs.append(X), yps.append(yp), yts.append(yt)
+    predictor = EnergyTimePredictor(cfg).fit(
+        np.concatenate(Xs), np.concatenate(yps), np.concatenate(yts))
+    return {
+        "apps": apps,
+        "testbed": testbed,
+        "predictor": predictor,
+        "class_features": class_features,
+        "setup_s": time.time() - t0,
+    }
+
+
+def idle_energy_j(result, pool) -> float:
+    """Pool-level idle energy: each device burns its class's idle power
+    (``DeviceClass.idle_power_w``) whenever it is not executing a job,
+    from t=0 to the pool makespan. Job energy already covers busy time —
+    this is the other half of the fleet's bill, and it is what penalizes
+    parking work-starved big chips in a mixed pool."""
+    makespan = result.makespan
+    busy = [0.0] * len(pool)
+    for r in result.records:
+        busy[r.device] += r.time_s
+    return sum(cls.idle_power_w * max(makespan - b, 0.0)
+               for cls, b in zip(pool, busy))
+
+
+def _service(f) -> PredictionService:
+    return PredictionService(
+        V5E_DVFS, predictor=f["predictor"],
+        app_features=f["class_features"][V5E_CLASS.name],
+        class_features=f["class_features"], testbed=f["testbed"])
+
+
+def mixed_vs_baselines(f, n_jobs: int, seed: int = 0) -> dict:
+    pool = make_device_pool(*POOL_SPEC)
+    jobs = list(heterogeneous_workload(f["apps"], f["testbed"], pool,
+                                       n_jobs=n_jobs, seed=seed))
+    t0 = time.time()
+
+    svc = _service(f)
+    r_mixed = run_schedule(jobs, RiskAware(V5E_DVFS, margin=0.05),
+                           Testbed(seed=100 + seed), service=svc,
+                           device_classes=pool)
+    per_class: dict[str, int] = {}
+    for x in r_mixed.records:
+        per_class[x.device_class] = per_class.get(x.device_class, 0) + 1
+
+    singles, single_pools = {}, {}
+    for cls in CLASSES:
+        single_pools[cls.name] = [cls] * len(pool)
+        r = run_schedule(jobs, RiskAware(V5E_DVFS, margin=0.05),
+                         Testbed(seed=100 + seed), service=svc,
+                         device_classes=single_pools[cls.name])
+        singles[cls.name] = r
+
+    r_rand = run_schedule(jobs, RandomPlacement(V5E_DVFS, seed=seed),
+                          Testbed(seed=100 + seed), service=svc,
+                          device_classes=pool)
+    wall = time.time() - t0
+
+    worst = max(singles, key=lambda k: singles[k].total_energy)
+    best = min(singles, key=lambda k: singles[k].total_energy)
+    r_worst, r_best = singles[worst], singles[best]
+    # pool-level totals: job energy + per-class idle power over the makespan
+    total_mixed = r_mixed.total_energy + idle_energy_j(r_mixed, pool)
+    total_single = {
+        k: v.total_energy + idle_energy_j(v, single_pools[k])
+        for k, v in singles.items()}
+    worst_total = max(total_single, key=total_single.get)
+    ok_e = r_mixed.total_energy <= r_worst.total_energy
+    ok_t = total_mixed <= total_single[worst_total]
+    ok_m = r_mixed.misses <= r_worst.misses
+    ok_r = r_mixed.total_energy <= r_rand.total_energy
+    ok_u = set(per_class) == {c.name for c in CLASSES}
+
+    singles_str = " ".join(
+        f"{k}:E={v.total_energy:.0f}J,total={total_single[k]:.0f}J,"
+        f"miss={v.misses}"
+        for k, v in singles.items())
+    csv("hetero_mixed_vs_baselines", wall,
+        f"jobs={n_jobs} mixed:E={r_mixed.total_energy:.0f}J,"
+        f"total={total_mixed:.0f}J,miss={r_mixed.misses} "
+        f"random:E={r_rand.total_energy:.0f}J,miss={r_rand.misses} "
+        f"{singles_str} placement={dict(sorted(per_class.items()))} "
+        f"table_builds={svc.stats.table_builds}")
+    print(f"# claim[hetero energy]: mixed {r_mixed.total_energy:.0f}J <= "
+          f"worst-single-class ({worst}) {r_worst.total_energy:.0f}J "
+          f"({'OK' if ok_e else 'FAIL'}); best single ({best}) = "
+          f"{r_best.total_energy:.0f}J")
+    print(f"# claim[hetero pool total]: with idle power, mixed "
+          f"{total_mixed:.0f}J <= worst single ({worst_total}) "
+          f"{total_single[worst_total]:.0f}J ({'OK' if ok_t else 'FAIL'})")
+    print(f"# claim[hetero deadlines]: mixed misses {r_mixed.misses} <= "
+          f"worst-single-class misses {r_worst.misses} "
+          f"({'OK' if ok_m else 'FAIL'})")
+    print(f"# claim[hetero placement]: joint {r_mixed.total_energy:.0f}J "
+          f"<= random {r_rand.total_energy:.0f}J "
+          f"({'OK' if ok_r else 'FAIL'}); classes used "
+          f"{sorted(per_class)} ({'OK' if ok_u else 'FAIL'})")
+    assert ok_e, "mixed pool burned more energy than the worst single class"
+    assert ok_t, "mixed pool lost on idle-inclusive pool-level energy"
+    assert ok_m, "mixed pool missed more deadlines than the worst class"
+    assert ok_r, "joint placement lost to random placement"
+    assert ok_u, "a device class never received work"
+    return {
+        "jobs": n_jobs,
+        "mixed": {"energy": r_mixed.total_energy,
+                  "total_with_idle": total_mixed,
+                  "misses": r_mixed.misses,
+                  "placement": per_class},
+        "random": {"energy": r_rand.total_energy, "misses": r_rand.misses},
+        "singles": {k: {"energy": v.total_energy,
+                        "total_with_idle": total_single[k],
+                        "misses": v.misses}
+                    for k, v in singles.items()},
+        "worst_single": worst,
+        "best_single": best,
+        "service_stats": svc.stats.summary(),
+    }
+
+
+def main(smoke: bool = False) -> dict:
+    f = hetero_fixtures(smoke)
+    n_jobs = 150 if smoke else 1000
+    return {"headline": mixed_vs_baselines(f, n_jobs)}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced fast-gate configuration (CI)")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

@@ -33,6 +33,8 @@ BENCHES = [
      "Beyond paper: oracle gap, multi-device, backlog, stragglers"),
     ("online", "benchmarks.bench_online",
      "Beyond paper: measurement feedback on a drifting stream"),
+    ("hetero", "benchmarks.bench_hetero",
+     "Beyond paper: heterogeneous device-class pool, joint placement"),
     ("kernels", "benchmarks.bench_kernels",
      "Kernel micro-benchmarks"),
     ("roofline", "benchmarks.bench_roofline",

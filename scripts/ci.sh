@@ -17,4 +17,10 @@ python -m benchmarks.run --only fig78
 echo "=== smoke: online measurement-feedback gate ==="
 python -m benchmarks.bench_online --smoke
 
+echo "=== smoke: heterogeneous-pool gate ==="
+python -m benchmarks.bench_hetero --smoke
+
+echo "=== golden traces: behavior-drift gate ==="
+python -m pytest -q tests/test_golden.py
+
 echo "=== ci.sh: all green ==="

@@ -1,0 +1,45 @@
+#!/usr/bin/env python
+"""Regenerate the golden schedule traces (tests/golden/).
+
+Run after an *intentional* behavior change::
+
+    PYTHONPATH=src python scripts/regen_golden.py
+
+then review the trace diff — it is the behavior change. The test suite
+(tests/test_golden.py) fails on any silent drift from these files.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tests"))
+
+import test_golden  # noqa: E402  (the canonical-scenario definition)
+
+
+def main() -> None:
+    traces = test_golden.compute_traces()
+    out = {
+        "meta": {
+            "scenario": "make_workload(PAPER_APPS) x seeds "
+                        f"{list(test_golden.SEEDS)}, all policies, "
+                        "run_schedule defaults, Testbed(seed=100+seed)",
+            "regen": "PYTHONPATH=src python scripts/regen_golden.py",
+            "columns": list(test_golden._COLUMNS),
+        },
+        "traces": traces,
+    }
+    test_golden.GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    with open(test_golden.GOLDEN_PATH, "w") as fh:
+        json.dump(out, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    n = sum(len(t["records"]) for t in traces.values())
+    print(f"wrote {test_golden.GOLDEN_PATH} "
+          f"({len(traces)} traces, {n} records)")
+
+
+if __name__ == "__main__":
+    main()

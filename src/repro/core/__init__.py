@@ -4,18 +4,21 @@ Layered as: prediction (``predictor`` + ``prediction_service``) →
 policy (``policies``) → execution (``engine``), with ``scheduler`` wiring
 them behind the classic ``run_schedule`` entry point.
 """
-from .dvfs import ClockPair, DVFSConfig, V5E_DVFS
+from .dvfs import (ClockPair, DVFSConfig, DeviceClass, DEVICE_CLASSES,
+                   V5E_CLASS, V5E_DVFS, V5LITE_CLASS, V5P_CLASS)
 from .simulator import AppProfile, Measurement, Testbed
 from .features import (ALL_INPUT_NAMES, CATEGORICAL_FEATURES, FEATURE_NAMES,
                        build_dataset, profile_features)
 from .predictor import (EnergyTimePredictor, PredictorConfig, loocv_rmse,
                         normalized_rmse)
 from .correlate import CorrelationIndex
-from .workload import (Job, drift_profile, drifting_workload, make_workload,
-                       stream_workload)
+from .workload import (Job, drift_profile, drifting_workload,
+                       heterogeneous_workload, make_device_pool,
+                       make_workload, stream_workload)
 from .prediction_service import ClockTable, PredictionService, ServiceStats
-from .policies import (BudgetManager, Policy, QueueAwareBudget, RiskAware,
-                       VirtualPacingBudget, resolve_policy)
+from .policies import (BudgetManager, DeviceCandidate, Policy,
+                       QueueAwareBudget, RiskAware, VirtualPacingBudget,
+                       resolve_policy)
 from .engine import EngineHooks, EventEngine
 from .scheduler import (POLICIES, ScheduleResult, legacy_run_schedule,
                         run_schedule)
@@ -24,15 +27,18 @@ from .online import (DriftConfig, DriftDetector, GBDTCorrector, Observation,
 
 __all__ = [
     "ClockPair", "DVFSConfig", "V5E_DVFS",
+    "DeviceClass", "DEVICE_CLASSES", "V5E_CLASS", "V5P_CLASS",
+    "V5LITE_CLASS",
     "AppProfile", "Measurement", "Testbed",
     "ALL_INPUT_NAMES", "CATEGORICAL_FEATURES", "FEATURE_NAMES",
     "build_dataset", "profile_features",
     "EnergyTimePredictor", "PredictorConfig", "loocv_rmse", "normalized_rmse",
     "CorrelationIndex", "Job", "make_workload", "stream_workload",
     "drifting_workload", "drift_profile",
+    "heterogeneous_workload", "make_device_pool",
     "ClockTable", "PredictionService", "ServiceStats",
-    "BudgetManager", "Policy", "QueueAwareBudget", "RiskAware",
-    "VirtualPacingBudget",
+    "BudgetManager", "DeviceCandidate", "Policy", "QueueAwareBudget",
+    "RiskAware", "VirtualPacingBudget",
     "resolve_policy", "EngineHooks", "EventEngine",
     "POLICIES", "ScheduleResult", "run_schedule", "legacy_run_schedule",
     "Observation", "ObservationStore", "RLSCorrector", "GBDTCorrector",

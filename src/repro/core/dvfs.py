@@ -28,7 +28,16 @@ from typing import Sequence
 
 import numpy as np
 
-__all__ = ["ClockPair", "DVFSConfig", "V5E_DVFS"]
+__all__ = [
+    "ClockPair",
+    "DVFSConfig",
+    "DeviceClass",
+    "V5E_DVFS",
+    "V5E_CLASS",
+    "V5P_CLASS",
+    "V5LITE_CLASS",
+    "DEVICE_CLASSES",
+]
 
 
 @dataclasses.dataclass(frozen=True, order=True)
@@ -128,3 +137,98 @@ class DVFSConfig:
 
 
 V5E_DVFS = DVFSConfig()
+
+
+# ---------------------------------------------------------------------- #
+#  Device classes — heterogeneous pools
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class DeviceClass:
+    """One accelerator generation in a heterogeneous pool.
+
+    Wraps a full :class:`DVFSConfig` (its own ladder + electrical model)
+    plus the scalars that summarize it relative to the v5e baseline —
+    placement policies and pool builders reason about classes, never about
+    raw configs. ``name`` keys every per-(app, class) cache in the
+    prediction service and the online adapter, so names must be unique
+    within a pool.
+
+    ``idle_power_w`` is the power a device of this class burns while it
+    sits in the free heap with no job — pool-level accounting only (job
+    energy already includes the chip's static power during execution).
+    """
+
+    name: str
+    dvfs: DVFSConfig
+    perf_scale: float = 1.0       # peak-FLOPs multiple of the v5e baseline
+    bw_scale: float = 1.0         # HBM-bandwidth multiple of the baseline
+    idle_power_w: float = V5E_DVFS.p_static
+
+    @classmethod
+    def derive(
+        cls,
+        name: str,
+        base: DVFSConfig = V5E_DVFS,
+        perf_scale: float = 1.0,
+        bw_scale: float = 1.0,
+        core_power_scale: float | None = None,
+        mem_power_scale: float | None = None,
+        p_static: float | None = None,
+        idle_power_w: float | None = None,
+        **dvfs_overrides,
+    ) -> "DeviceClass":
+        """Scale a baseline config into a new generation.
+
+        ``perf_scale``/``bw_scale`` multiply peak FLOP/s and HBM bandwidth;
+        the power coefficients default to scaling with them (same J/FLOP,
+        J/byte) unless ``core_power_scale``/``mem_power_scale`` say
+        otherwise — a big *efficient* chip passes a power scale below its
+        perf scale. Ladder/voltage fields pass through ``dvfs_overrides``.
+        """
+        cfg = dataclasses.replace(
+            base,
+            peak_flops=base.peak_flops * perf_scale,
+            hbm_bw=base.hbm_bw * bw_scale,
+            a_core=base.a_core * (perf_scale if core_power_scale is None
+                                  else core_power_scale),
+            a_mem=base.a_mem * (bw_scale if mem_power_scale is None
+                                else mem_power_scale),
+            p_static=base.p_static if p_static is None else p_static,
+            **dvfs_overrides,
+        )
+        return cls(name=name, dvfs=cfg, perf_scale=perf_scale,
+                   bw_scale=bw_scale,
+                   idle_power_w=(cfg.p_static if idle_power_w is None
+                                 else idle_power_w))
+
+
+#: The baseline chip — wraps :data:`V5E_DVFS` unchanged, so a pool of only
+#: this class is the uniform testbed every pre-heterogeneity benchmark ran.
+V5E_CLASS = DeviceClass("v5e", V5E_DVFS)
+
+#: Big, *efficient* chip: ~2.3x FLOP/s and ~3.3x HBM bandwidth, at power
+#: coefficients below those scale factors (better J/FLOP and J/byte) but a
+#: much higher static floor — racing a tiny job here wastes the floor,
+#: which is exactly the placement trade-off heterogeneous scheduling must
+#: weigh (Mei et al., arXiv:2104.00486).
+V5P_CLASS = DeviceClass.derive(
+    "v5p", perf_scale=2.3, bw_scale=3.3,
+    core_power_scale=1.8, mem_power_scale=2.2,
+    p_static=60.0)
+
+#: Small, low-power chip: under half the throughput with a coarser ladder
+#: (8 core x 3 mem steps — per-class ladders are first-class, and the low
+#: end reaches into the shared-voltage-rail plateau) and a ~10 W static
+#: floor. Slack-rich memory-light jobs are cheapest here.
+V5LITE_CLASS = DeviceClass.derive(
+    "v5lite", perf_scale=0.45, bw_scale=0.55,
+    core_power_scale=0.55, mem_power_scale=0.60,
+    p_static=10.0,
+    core_scales=tuple(np.round(np.linspace(0.35, 1.00, 8), 4)),
+    mem_scales=(0.60, 0.80, 1.00),
+    default_core=0.85)
+
+#: Registry of the stock classes (pools may mix in custom ones freely).
+DEVICE_CLASSES: dict[str, DeviceClass] = {
+    c.name: c for c in (V5E_CLASS, V5P_CLASS, V5LITE_CLASS)
+}

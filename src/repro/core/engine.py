@@ -7,8 +7,17 @@ The reusable heart of the scheduler, decomposed out of the original
   nondecreasing arrival order (a generator works: the engine never asks for
   ``len()`` and never materializes the future — the online/streaming
   setting the paper's batch formulation cannot express);
-* a **device pool** — min-heap of ``(free_time, device)``, EDF job queue,
-  per-device clock state (``device_clocks``) updated at each dispatch;
+* a **device pool** — min-heap of ``(free_time, device_index)`` (tie-break
+  explicitly on the integer index — deterministic in pool construction
+  order, and device/class objects never enter the heap), EDF job queue,
+  per-device clock state (``device_clocks``) updated at each dispatch.
+  Pools may be **heterogeneous**: pass ``device_classes`` (one
+  :class:`~repro.core.dvfs.DeviceClass` per device) and each decision
+  becomes a joint *(device class, clock)* choice over every class with a
+  device free at the job's start time
+  (:meth:`~repro.core.policies.Policy.select_device_clock`); a pool with a
+  single distinct class reduces exactly to the classless earliest-device
+  path — bit-identical records, the refactor's safety rail;
 * **delegation**: budgets come from the composable
   :class:`~repro.core.policies.BudgetManager` chain, clock choice from the
   :class:`~repro.core.policies.Policy`, predictions from the shared
@@ -52,8 +61,9 @@ from typing import Callable, Iterable, Iterator, Optional, Sequence
 
 import numpy as np
 
-from .dvfs import ClockPair
-from .policies import BudgetManager, Policy, resolve_policy
+from .dvfs import ClockPair, DeviceClass
+from .policies import (BudgetManager, DeviceCandidate, Policy,
+                       resolve_policy)
 from .prediction_service import PredictionService
 from .simulator import Testbed
 from .workload import Job
@@ -78,6 +88,11 @@ class ExecutionRecord:
     predicted_power: float | None
     met_deadline: bool
     had_feasible_clock: bool
+    #: Device-class name for explicit pools, None on the classless path.
+    #: compare=False: the label is provenance, not behavior — a uniform
+    #: explicit pool stays ``==``-identical to the classless engine (the
+    #: equivalence tests' contract).
+    device_class: str | None = dataclasses.field(default=None, compare=False)
 
 
 @dataclasses.dataclass
@@ -169,11 +184,27 @@ class EventEngine:
         hooks: Optional[EngineHooks] = None,
         seed: int = 0,
         feedback: Optional[object] = None,
+        device_classes: Optional[Sequence[DeviceClass]] = None,
     ):
         self.testbed = testbed
         self.policy = resolve_policy(policy, testbed.dvfs)
         self.service = service
-        self.n_devices = int(n_devices)
+        #: Explicit pool: one DeviceClass per device, positional — the
+        #: device index IS the list position, and the free-heap tie-break
+        #: is on that index (never on class objects), so dispatch order is
+        #: deterministic in pool construction order. None = classless
+        #: uniform pool of ``n_devices`` testbed-dvfs devices (legacy).
+        self.device_classes = (None if device_classes is None
+                               else list(device_classes))
+        if self.device_classes is not None:
+            if not self.device_classes:
+                raise ValueError("device_classes must not be empty")
+            self.n_devices = len(self.device_classes)
+        else:
+            self.n_devices = int(n_devices)
+        self._multi_class = (
+            self.device_classes is not None
+            and len({c.name for c in self.device_classes}) > 1)
         self.budget_managers = list(budget_managers)
         self.hooks = hooks or EngineHooks()
         self.seed = seed
@@ -186,14 +217,22 @@ class EventEngine:
                 and not service.has_predictor):
             raise ValueError(
                 f"policy {self.policy.name!r} needs a fitted predictor")
+        if self.device_classes is not None and service is not None:
+            # register the pool's classes up front: table-free policies
+            # (dc/mc) never fetch tables, but a feedback sink still needs
+            # the service to resolve each record's class to the right
+            # ladder and base table (also surfaces name conflicts early)
+            for cls in self.device_classes:
+                service.register_class(cls)
 
     # ------------------------------------------------------------------ #
-    def _table_for(self, job: Job):
+    def _table_for(self, job: Job,
+                   device_class: Optional[DeviceClass] = None):
         kind = self.policy.table_kind
         if kind == "predicted":
-            return self.service.table(job.name)
+            return self.service.table(job.name, device_class)
         if kind == "truth":
-            return self.service.truth_table(job.app)
+            return self.service.truth_table(job.app, device_class)
         return None
 
     def run(self, jobs: Iterable[Job]) -> ScheduleResult:
@@ -204,6 +243,10 @@ class EventEngine:
             bm.reset()
         self.device_clocks = {dev: None for dev in range(self.n_devices)}
 
+        # free-heap entries are always (free_time, device_index) — the
+        # tie-break on equal free times is explicitly the integer device
+        # index (list position for explicit pools), never a device or
+        # class object: total order, deterministic in construction order
         free = [(0.0, dev) for dev in range(self.n_devices)]
         heapq.heapify(free)
         queue: list[tuple[float, int, Job]] = []   # (deadline, tiebreak, job)
@@ -219,6 +262,10 @@ class EventEngine:
 
         while not stream.exhausted or queue:
             free_t, dev = heapq.heappop(free)
+            # the device's true free time — free_t may be bumped to the
+            # next arrival below, and a device that loses the joint
+            # decision must rejoin the heap with its *real* availability
+            orig_free_t = free_t
             # admit everything that has arrived by the time this device
             # frees up; if the queue is empty, jump to the next arrival
             if not queue:
@@ -248,15 +295,52 @@ class EventEngine:
             for bm in self.budget_managers:
                 budget = bm.apply(job, start, budget)
 
-            sel = self.policy.select_clock(job, budget, self._table_for(job))
+            # ---- joint (device, clock) decision ----------------------- #
+            if not self._multi_class:
+                chosen_class = (self.device_classes[dev]
+                                if self.device_classes is not None else None)
+                sel = self.policy.select_for_class(
+                    job, budget, self._table_for(job, chosen_class),
+                    dvfs=None if chosen_class is None else chosen_class.dvfs)
+            else:
+                # every device free by `start` could start this job at
+                # `start` with the same budget; pop them (heap yields
+                # ascending (free_time, index) — deterministic) and offer
+                # the policy one candidate per distinct class,
+                # earliest-free first, pushing the losers back untouched
+                entries = [(orig_free_t, dev)]
+                while free and free[0][0] <= start:
+                    entries.append(heapq.heappop(free))
+                reps: list[tuple[float, int]] = []
+                cands: list[DeviceCandidate] = []
+                seen: set[str] = set()
+                for ent in entries:
+                    cls = self.device_classes[ent[1]]
+                    if cls.name in seen:
+                        continue
+                    seen.add(cls.name)
+                    reps.append(ent)
+                    cands.append(DeviceCandidate(
+                        cls, budget, self._table_for(job, cls)))
+                ci, sel = self.policy.select_device_clock(job, cands)
+                chosen = reps[ci]
+                for ent in entries:
+                    if ent != chosen:
+                        heapq.heappush(free, ent)
+                free_t, dev = chosen     # start is unchanged: free_t<=start
+                chosen_class = self.device_classes[dev]
+
+            run_dvfs = None if chosen_class is None else chosen_class.dvfs
             clock = sel.clock
             if clock is None:
-                clock = d.max_clock        # sprint (see scheduler docstring)
+                # sprint at the chosen class's max clock (see scheduler
+                # docstring — the engine never drops work)
+                clock = (d if run_dvfs is None else run_dvfs).max_clock
             if self.hooks.on_dispatch:
                 self.hooks.on_dispatch(job, dev, clock, start)
             self.device_clocks[dev] = clock
 
-            meas = self.testbed.run(job.app, clock, rng=rng)
+            meas = self.testbed.run(job.app, clock, rng=rng, dvfs=run_dvfs)
             end = start + meas.time_s
             rec = ExecutionRecord(
                 job_id=job.job_id, name=job.name, arrival=job.arrival,
@@ -266,6 +350,8 @@ class EventEngine:
                 predicted_power=sel.power,
                 met_deadline=end <= job.deadline + 1e-9,
                 had_feasible_clock=sel.feasible,
+                device_class=(None if chosen_class is None
+                              else chosen_class.name),
             )
             records.append(rec)
             if self.hooks.on_complete:

@@ -461,19 +461,39 @@ class OnlineAdapter:
         self.enabled = bool(enabled)
         self.n_observed = 0
         self.n_drifts = 0
-        self._clock_index = {c: i for i, c in enumerate(service.clocks)}
+        # per-device-class ladder index maps (a record's clock indexes a
+        # different ladder on each class), built lazily; key None = the
+        # service's own ladder
+        self._clock_index: dict[Optional[str], dict[ClockPair, int]] = {
+            None: {c: i for i, c in enumerate(service.clocks)}}
+        # app name -> correction keys seen for it (one per device class)
+        self._app_keys: dict[str, set[str]] = {}
         service.attach_corrector(self.corrector)
 
     # -- feedback entry point (EventEngine.feedback) -------------------- #
     def observe(self, rec: ExecutionRecord) -> Optional[Observation]:
         if not self.enabled:
             return None
-        i = self._clock_index.get(rec.clock)
-        if i is None:       # clock outside the service ladder: can't label
+        # resolve the record's device class: classes normalized onto the
+        # service's own dvfs (and the classless path) share key None, so a
+        # uniform baseline pool corrects exactly like the classless engine
+        dc = self.service.device_class(rec.device_class)
+        ck = None if dc is None else dc.name
+        idx_map = self._clock_index.get(ck)
+        if idx_map is None:
+            idx_map = {c: i
+                       for i, c in enumerate(self.service.clocks_for(ck))}
+            self._clock_index[ck] = idx_map
+        i = idx_map.get(rec.clock)
+        if i is None:       # clock outside the class's ladder: can't label
             return None
-        base = self.service.base_table(rec.name)
+        base = self.service.base_table(rec.name, dc)
+        # corrections, statistics, and drift detection are all filed per
+        # (app, device class) — a drift on one class never resets another
+        key = PredictionService._correction_key(rec.name, ck)
+        self._app_keys.setdefault(rec.name, set()).add(key)
         obs = Observation(
-            name=rec.name, clock=rec.clock, time_s=rec.time_s,
+            name=key, clock=rec.clock, time_s=rec.time_s,
             power_w=rec.power_w,
             r_time=math.log(max(rec.time_s, 1e-12) / max(base.T[i], 1e-12)),
             r_power=math.log(max(rec.power_w, 1e-12) / max(base.P[i], 1e-12)),
@@ -487,14 +507,14 @@ class OnlineAdapter:
         # (detector still works, margins stay conservative).
         predict = getattr(self.corrector, "predicted_residual", None)
         innovation = obs.r_time - (
-            predict(rec.name, rec.clock) if predict is not None else 0.0)
+            predict(key, rec.clock) if predict is not None else 0.0)
         st = self.store.update(obs, innovation=innovation)
         drifted = (self.detector is not None
-                   and self.detector.observe(rec.name, innovation))
+                   and self.detector.observe(key, innovation))
         if drifted:
             self.n_drifts += 1
-            self.store.reset(rec.name)
-            self.detector.reset(rec.name)
+            self.store.reset(key)
+            self.detector.reset(key)
             self.service.invalidate(rec.name)
         elif st.n % self.update_every == 0:
             self.service.invalidate(rec.name)
@@ -505,9 +525,14 @@ class OnlineAdapter:
         """Residual-variance-driven deadline margin for
         :class:`~repro.core.policies.RiskAware` (``margin_fn=adapter.margin``):
         apps whose corrections are still noisy get a larger safety
-        inflation on predicted time."""
-        return min(self.risk_scale * self.store.innovation_rms(name),
-                   self.max_margin)
+        inflation on predicted time. Per-app across classes: the margin is
+        the worst (largest) innovation RMS over the app's device classes —
+        conservative, since the policy cannot know placement in advance."""
+        keys = self._app_keys.get(name) or (name,)
+        return min(
+            self.risk_scale * max(self.store.innovation_rms(k)
+                                  for k in keys),
+            self.max_margin)
 
     def summary(self) -> str:
         return (f"observed={self.n_observed} drifts={self.n_drifts} "

@@ -38,6 +38,18 @@ equivalence tests in tests/test_engine.py).
    dict at runtime for experiments). ``resolve_policy`` and the engine pick
    it up by name; nothing else needs changing.
 
+**Heterogeneous pools (PR 3).** On a mixed pool the decision is *joint*:
+which device class AND which clock. ``select_device_clock(job, candidates)``
+receives one :class:`DeviceCandidate` per distinct class with a device free
+at the job's start (earliest-free first), runs the per-class choice
+``select_for_class`` (default: ``select_clock`` on that class's table;
+dc/mc override to read the class's fixed clock), and ranks candidates with
+``class_score`` — feasible-first, then predicted energy, ties to the
+earliest-free candidate. A uniform pool therefore produces exactly the
+classless decision, which is the refactor's safety rail; new policies get
+class-awareness for free and override ``class_score``/``select_device_clock``
+only for custom placement logic.
+
 Invariants: policies are stateless between jobs (all cross-job state lives
 in budget managers or the prediction service); they never call the
 predictor directly — the ``table`` argument is their only view of
@@ -51,16 +63,17 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from .dvfs import ClockPair, DVFSConfig
+from .dvfs import ClockPair, DeviceClass, DVFSConfig
 from .prediction_service import ClockTable
 from .workload import Job
 
 __all__ = [
     "ClockSelection",
+    "DeviceCandidate",
     "Policy",
     "DefaultClock",
     "MaxClock",
@@ -93,6 +106,22 @@ class ClockSelection:
         return self.clock is not None
 
 
+@dataclasses.dataclass(frozen=True)
+class DeviceCandidate:
+    """One placement option in a joint (device, clock) decision: a device
+    class with at least one device free at the job's start time, its time
+    budget there (identical across candidates — all are free by the start),
+    and the class's prediction table (None for table-free policies)."""
+
+    device_class: DeviceClass
+    budget: float
+    table: Optional[ClockTable]
+
+    @property
+    def dvfs(self) -> DVFSConfig:
+        return self.device_class.dvfs
+
+
 class Policy:
     """Base class: stateless clock-selection strategy.
 
@@ -112,26 +141,86 @@ class Policy:
                      table: Optional[ClockTable]) -> ClockSelection:
         raise NotImplementedError
 
+    # -- heterogeneous pools ------------------------------------------- #
+    def select_for_class(self, job: Job, budget: float,
+                         table: Optional[ClockTable],
+                         dvfs: Optional[DVFSConfig] = None) -> ClockSelection:
+        """Per-device-class clock choice. Table-driven policies are
+        class-agnostic (the class is baked into the table they are handed),
+        so the default delegates to :meth:`select_clock`; fixed-clock
+        policies override to read the *class's* default/max clock."""
+        return self.select_clock(job, budget, table)
+
+    def class_score(self, job: Job, cand: DeviceCandidate,
+                    sel: ClockSelection) -> tuple:
+        """Totally-ordered score for one candidate (lower is better).
+        Default: any feasible placement beats any infeasible one; feasible
+        placements rank by predicted energy at the selected clock;
+        infeasible ones by the best predicted time on their ladder (the
+        engine sprints infeasible jobs, so the miss should burn on the
+        fastest class, not the earliest-free one); policies without
+        predictions (dc/mc) score every class equally — ties keep the
+        earliest-free candidate, which is what makes a uniform pool
+        collapse to today's earliest-device dispatch."""
+        if not sel.feasible:
+            if cand.table is not None and len(cand.table):
+                return (1, float(np.min(cand.table.T)))
+            return (1, 0.0)
+        if sel.power is None or sel.time is None:
+            return (0, 0.0)
+        return (0, sel.power * sel.time)
+
+    def select_device_clock(
+        self, job: Job, candidates: Sequence[DeviceCandidate],
+    ) -> tuple[int, ClockSelection]:
+        """Joint (device class, clock) decision over the co-free candidate
+        classes, ordered earliest-free first. Returns the chosen candidate
+        index and its clock selection. Strict ``<`` comparison keeps the
+        first (earliest-free, lowest-device-index) candidate on score ties,
+        so a single-candidate pool reduces exactly to
+        :meth:`select_for_class`."""
+        best_i, best_sel, best_score = 0, None, None
+        for i, cand in enumerate(candidates):
+            sel = self.select_for_class(job, cand.budget, cand.table,
+                                        dvfs=cand.dvfs)
+            if best_sel is None:
+                best_i, best_sel, best_score = i, sel, self.class_score(
+                    job, cand, sel)
+                continue
+            score = self.class_score(job, cand, sel)
+            if score < best_score:
+                best_i, best_sel, best_score = i, sel, score
+        return best_i, best_sel
+
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return f"{type(self).__name__}({self.name!r})"
 
 
 class DefaultClock(Policy):
-    """Paper's DC baseline: every job at the default application clock."""
+    """Paper's DC baseline: every job at the default application clock.
+    On a heterogeneous pool: the *earliest-free device's* default clock —
+    DC does no placement intelligence, by design."""
 
     name = "dc"
 
     def select_clock(self, job, budget, table):
         return ClockSelection(self.dvfs.default_clock)
 
+    def select_for_class(self, job, budget, table, dvfs=None):
+        return ClockSelection((dvfs or self.dvfs).default_clock)
+
 
 class MaxClock(Policy):
-    """Paper's MC baseline ("computational sprinting"): always max clock."""
+    """Paper's MC baseline ("computational sprinting"): always max clock.
+    On a heterogeneous pool: the earliest-free device's max clock."""
 
     name = "mc"
 
     def select_clock(self, job, budget, table):
         return ClockSelection(self.dvfs.max_clock)
+
+    def select_for_class(self, job, budget, table, dvfs=None):
+        return ClockSelection((dvfs or self.dvfs).max_clock)
 
 
 class PaperDDVFS(Policy):

@@ -34,16 +34,25 @@ Invariants (the contracts tests/test_online.py and tests/test_engine.py pin):
 
 * **Cache-key contract.** Base tables are keyed by the *resolved profile*
   (``("own", name)`` or ``("corr", correlated_name)`` — see
-  :meth:`resolve`), so correlated apps share one build. Every cached base
-  quantity (tables, ``t_min``/``t_dc`` points, truth sweeps) is a pure
-  function of ``(predictor, app profile, DVFS config)`` and therefore never
-  invalidates: a service may be reused across runs indefinitely.
-* **Corrected tables are keyed by app name** (corrections are per-app even
-  when base tables are shared via correlation) and invalidate only through
-  :meth:`invalidate` — after which the next :meth:`table` call re-applies
-  the corrector's *current* correction to the cached base (no predictor
-  re-run). A served corrected table always reflects every observation up to
-  the most recent invalidation of that app.
+  :meth:`resolve`) **plus the device-class key**, so correlated apps share
+  one build per class. Every cached base quantity (tables, ``t_min``/
+  ``t_dc`` points, truth sweeps) is a pure function of ``(predictor, app
+  profile, DVFS config)`` and therefore never invalidates: a service may
+  be reused across runs indefinitely.
+* **Device-class keying (PR 3).** Every query takes an optional
+  :class:`~repro.core.dvfs.DeviceClass`; ``None`` — or any class whose
+  dvfs equals the service's own with no per-class features — normalizes to
+  the same key (:meth:`register_class`), so uniform pools of the baseline
+  class hit the very same cache entries as the classless path. Distinct
+  classes get their own ladder, feature matrix, and cache rows, built once
+  each, with the same build-once semantics.
+* **Corrected tables are keyed by (app name, class key)** (corrections are
+  per-(app, class) even when base tables are shared via correlation) and
+  invalidate only through :meth:`invalidate` — which drops the app across
+  every class; the next :meth:`table` call re-applies the corrector's
+  *current* correction to the cached base (no predictor re-run). A served
+  corrected table always reflects every observation up to the most recent
+  invalidation of that app.
 * **Frozen-path identity.** With no corrector attached — or an attached
   corrector holding zero observations (its scale is exactly ``exp(0)``) —
   :meth:`table` output is bit-identical to the pre-feedback service.
@@ -56,7 +65,7 @@ from typing import Optional
 import numpy as np
 
 from .correlate import CorrelationIndex
-from .dvfs import ClockPair, DVFSConfig
+from .dvfs import ClockPair, DVFSConfig, DeviceClass
 from .features import clock_features
 from .predictor import EnergyTimePredictor
 from .simulator import AppProfile, Testbed
@@ -126,6 +135,7 @@ class PredictionService:
         testbed: Optional[Testbed] = None,
         use_kernel: bool | str = "auto",
         kernel_min_rows: int = 512,
+        class_features: Optional[dict[str, dict[str, np.ndarray]]] = None,
     ):
         self.dvfs = dvfs
         self.predictor = predictor
@@ -135,19 +145,32 @@ class PredictionService:
         self.testbed = testbed
         self.use_kernel = use_kernel
         self.kernel_min_rows = int(kernel_min_rows)
+        #: per-class app profile vectors (``{class_name: {app: feats}}``) —
+        #: the "profile once per device class" campaign. Apps/classes not
+        #: listed fall back to the shared ``app_features`` (+ correlation).
+        self.class_features = class_features or {}
         self.stats = ServiceStats()
 
         self.clocks: tuple[ClockPair, ...] = tuple(dvfs.clock_list())
         self._clock_X = [clock_features(c, dvfs) for c in self.clocks]
         self._corrector = None
-        self._corrected: dict[str, ClockTable] = {}
+        # corrected views keyed (app name, class key); base tables keyed
+        # (resolved profile key, class key). class key None = the service's
+        # own dvfs — a DeviceClass wrapping the same config normalizes to
+        # None, so uniform pools share today's cache entries bit-for-bit.
+        self._corrected: dict[tuple[str, Optional[str]], ClockTable] = {}
         self._tables: dict[tuple, ClockTable] = {}
-        self._truth: dict[AppProfile, ClockTable] = {}
+        self._truth: dict[tuple, ClockTable] = {}
         self._resolved: dict[str, tuple[tuple, np.ndarray]] = {}
-        self._tmin: dict[str, float] = {}
-        self._tdc: dict[str, float] = {}
-        self._true_tmin: dict[AppProfile, float] = {}
-        self._true_tdc: dict[AppProfile, float] = {}
+        self._tmin: dict[tuple, float] = {}
+        self._tdc: dict[tuple, float] = {}
+        self._true_tmin: dict[tuple, float] = {}
+        self._true_tdc: dict[tuple, float] = {}
+        self._classes: dict[str, DeviceClass] = {}
+        self._class_keys: dict[str, Optional[str]] = {}
+        self._seen_class_dvfs: dict[str, DVFSConfig] = {}
+        self._class_clocks: dict[
+            str, tuple[tuple[ClockPair, ...], list[np.ndarray]]] = {}
 
     # ------------------------------------------------------------------ #
     @property
@@ -172,37 +195,110 @@ class PredictionService:
         return key, feats
 
     # ------------------------------------------------------------------ #
+    #  Device classes
+    # ------------------------------------------------------------------ #
+    def register_class(self, device_class: Optional[DeviceClass]
+                       ) -> Optional[str]:
+        """Normalize a device class to its cache key.
+
+        Returns ``None`` when the class is indistinguishable from the
+        service's own dvfs (same ladder, same electrical model, no per-class
+        feature overrides) — those classes share the base caches, which is
+        what makes a uniform pool of the baseline class bit-identical to the
+        classless path. Distinct classes get their own ladder feature matrix
+        built once here."""
+        if device_class is None:
+            return None
+        name = device_class.name
+        if name in self._class_keys:
+            seen = self._seen_class_dvfs[name]
+            if seen is not device_class.dvfs and seen != device_class.dvfs:
+                raise ValueError(
+                    f"conflicting DeviceClass {name!r}: two classes with "
+                    "the same name but different DVFS configs")
+            return self._class_keys[name]
+        self._seen_class_dvfs[name] = device_class.dvfs
+        if (device_class.dvfs == self.dvfs
+                and name not in self.class_features):
+            self._class_keys[name] = None
+            return None
+        self._class_keys[name] = name
+        self._classes[name] = device_class
+        clocks = tuple(device_class.dvfs.clock_list())
+        self._class_clocks[name] = (
+            clocks, [clock_features(c, device_class.dvfs) for c in clocks])
+        return name
+
+    def device_class(self, name: Optional[str]) -> Optional[DeviceClass]:
+        """The registered class for ``name`` (None for unknown names and
+        for classes normalized onto the service's own dvfs)."""
+        return self._classes.get(name) if name is not None else None
+
+    def clocks_for(self, class_key: Optional[str]) -> tuple[ClockPair, ...]:
+        """The ladder a class's tables are indexed by."""
+        if class_key is None:
+            return self.clocks
+        return self._class_clocks[class_key][0]
+
+    def _class_dvfs(self, class_key: Optional[str]) -> DVFSConfig:
+        return (self.dvfs if class_key is None
+                else self._classes[class_key].dvfs)
+
+    def _feats_for(self, name: str, class_key: Optional[str]
+                   ) -> tuple[tuple, np.ndarray]:
+        """Profile vector for ``(app, class)``: the per-class profiling
+        campaign when one was supplied, else the shared default-class
+        profile (with correlation indirection, exactly as before)."""
+        if class_key is not None:
+            over = self.class_features.get(class_key)
+            if over is not None and name in over:
+                return ("cls", class_key, name), over[name]
+        return self.resolve(name)
+
+    @staticmethod
+    def _correction_key(name: str, class_key: Optional[str]) -> str:
+        """The key the online layer files corrections under — per app on
+        the default class, per (app, class) on explicit classes."""
+        return name if class_key is None else f"{name}::{class_key}"
+
+    # ------------------------------------------------------------------ #
     #  Predicted tables
     # ------------------------------------------------------------------ #
-    def base_table(self, name: str) -> ClockTable:
-        """Frozen-predictor ladder ``(P, T)`` for app ``name`` — one build
-        per distinct resolved profile, every later call a cache hit. Never
-        affected by the online correction layer."""
-        key, feats = self.resolve(name)
+    def base_table(self, name: str,
+                   device_class: Optional[DeviceClass] = None) -> ClockTable:
+        """Frozen-predictor ladder ``(P, T)`` for ``(app, device class)`` —
+        one build per distinct (resolved profile, class), every later call
+        a cache hit. Never affected by the online correction layer."""
+        ck = self.register_class(device_class)
+        feat_key, feats = self._feats_for(name, ck)
+        key = (feat_key, ck)
         tab = self._tables.get(key)
         if tab is not None:
             self.stats.table_hits += 1
             return tab
-        tab = self.table_for_features(feats)
+        tab = self.table_for_features(feats, class_key=ck)
         self._tables[key] = tab
         self.stats.table_builds += 1
         return tab
 
-    def table(self, name: str) -> ClockTable:
+    def table(self, name: str,
+              device_class: Optional[DeviceClass] = None) -> ClockTable:
         """The table scheduling decisions consume: the frozen base table,
-        with the attached corrector's current per-app corrections applied
-        (cached until :meth:`invalidate`). Without a corrector this *is*
-        :meth:`base_table`."""
-        base = self.base_table(name)
+        with the attached corrector's current per-(app, class) corrections
+        applied (cached until :meth:`invalidate`). Without a corrector this
+        *is* :meth:`base_table`."""
+        ck = self.register_class(device_class)
+        base = self.base_table(name, device_class)
         if self._corrector is None:
             return base
-        tab = self._corrected.get(name)
+        tab = self._corrected.get((name, ck))
         if tab is not None:
             self.stats.corrected_hits += 1
             return tab
-        P, T = self._corrector.correct(name, base.clocks, base.P, base.T)
+        P, T = self._corrector.correct(self._correction_key(name, ck),
+                                       base.clocks, base.P, base.T)
         tab = ClockTable(clocks=base.clocks, P=P, T=T, source="corrected")
-        self._corrected[name] = tab
+        self._corrected[(name, ck)] = tab
         self.stats.corrected_builds += 1
         return tab
 
@@ -228,24 +324,33 @@ class PredictionService:
 
     def invalidate(self, name: Optional[str] = None) -> int:
         """Targeted corrected-cache invalidation: drop app ``name``'s
-        corrected table (all apps when ``name`` is None) so the next
-        :meth:`table` call re-applies the corrector's current correction to
-        the cached base. Returns the number of entries dropped. Base tables
-        are pure functions of frozen inputs and are deliberately *not*
-        invalidatable."""
+        corrected tables — across every device class — (all apps when
+        ``name`` is None) so the next :meth:`table` call re-applies the
+        corrector's current correction to the cached base. Returns the
+        number of entries dropped. Base tables are pure functions of frozen
+        inputs and are deliberately *not* invalidatable."""
         self.stats.invalidations += 1
         if name is None:
             n = len(self._corrected)
             self._corrected.clear()
             return n
-        return 0 if self._corrected.pop(name, None) is None else 1
+        stale = [k for k in self._corrected if k[0] == name]
+        for k in stale:
+            del self._corrected[k]
+        return len(stale)
 
-    def table_for_features(self, feats: np.ndarray) -> ClockTable:
-        """Uncached vectorized table build from a raw profile vector."""
-        X = np.stack([np.concatenate([feats, cx]) for cx in self._clock_X])
+    def table_for_features(self, feats: np.ndarray,
+                           class_key: Optional[str] = None) -> ClockTable:
+        """Uncached vectorized table build from a raw profile vector, over
+        the given class's ladder (default: the service's own)."""
+        if class_key is None:
+            clocks, clock_X = self.clocks, self._clock_X
+        else:
+            clocks, clock_X = self._class_clocks[class_key]
+        X = np.stack([np.concatenate([feats, cx]) for cx in clock_X])
         P = self._predict(self.predictor.power, X)
         T = self._predict(self.predictor.time, X)
-        return ClockTable(clocks=self.clocks, P=P, T=T, source="predicted")
+        return ClockTable(clocks=clocks, P=P, T=T, source="predicted")
 
     def _predict(self, target, X: np.ndarray) -> np.ndarray:
         """One regressor over a batch; routes big GBDT batches to Pallas."""
@@ -273,23 +378,32 @@ class PredictionService:
     # ------------------------------------------------------------------ #
     #  Point predictions (budget-manager inputs)
     # ------------------------------------------------------------------ #
-    def _point_time(self, cache: dict, name: str, clock: ClockPair) -> float:
-        val = cache.get(name)
+    def _point_time(self, cache: dict, name: str,
+                    device_class: Optional[DeviceClass],
+                    which: str) -> float:
+        ck = self.register_class(device_class)
+        val = cache.get((name, ck))
         if val is None:
-            x = np.concatenate([self.app_features[name],
-                                clock_features(clock, self.dvfs)])
+            d = self._class_dvfs(ck)
+            clock = d.max_clock if which == "min" else d.default_clock
+            feats = self.app_features[name]
+            if ck is not None:
+                feats = self.class_features.get(ck, {}).get(name, feats)
+            x = np.concatenate([feats, clock_features(clock, d)])
             val = float(self.predictor.predict_time(x[None])[0])
-            cache[name] = val
+            cache[(name, ck)] = val
             self.stats.point_predictions += 1
         return val
 
-    def t_min(self, name: str) -> float:
+    def t_min(self, name: str,
+              device_class: Optional[DeviceClass] = None) -> float:
         """Predicted max-clock ("sprint") time from the app's own profile."""
-        return self._point_time(self._tmin, name, self.dvfs.max_clock)
+        return self._point_time(self._tmin, name, device_class, "min")
 
-    def t_dc(self, name: str) -> float:
+    def t_dc(self, name: str,
+             device_class: Optional[DeviceClass] = None) -> float:
         """Predicted default-clock time from the app's own profile."""
-        return self._point_time(self._tdc, name, self.dvfs.default_clock)
+        return self._point_time(self._tdc, name, device_class, "dc")
 
     # ------------------------------------------------------------------ #
     #  Ground truth (oracle policy)
@@ -301,33 +415,44 @@ class PredictionService:
                 "(oracle policy / truth-based pacing)")
         return self.testbed
 
-    def truth_table(self, app: AppProfile) -> ClockTable:
+    def truth_table(self, app: AppProfile,
+                    device_class: Optional[DeviceClass] = None) -> ClockTable:
         # keyed by the (frozen, hashable) profile itself, NOT app.name: a
         # drifted workload reuses the name with shifted coefficients, and
         # the oracle must see the *current* truth (it is an upper bound).
-        tab = self._truth.get(app)
+        ck = self.register_class(device_class)
+        tab = self._truth.get((app, ck))
         if tab is not None:
             self.stats.truth_hits += 1
             return tab
         tb = self._require_testbed()
-        T = np.array([tb.true_time(app, c) for c in self.clocks])
-        P = np.array([tb.true_power(app, c) for c in self.clocks])
-        tab = ClockTable(clocks=self.clocks, P=P, T=T, source="truth")
-        self._truth[app] = tab
+        d = None if ck is None else self._classes[ck].dvfs
+        clocks = self.clocks_for(ck)
+        T = np.array([tb.true_time(app, c, dvfs=d) for c in clocks])
+        P = np.array([tb.true_power(app, c, dvfs=d) for c in clocks])
+        tab = ClockTable(clocks=clocks, P=P, T=T, source="truth")
+        self._truth[(app, ck)] = tab
         self.stats.truth_builds += 1
         return tab
 
-    def true_t_min(self, app: AppProfile) -> float:
-        val = self._true_tmin.get(app)
+    def true_t_min(self, app: AppProfile,
+                   device_class: Optional[DeviceClass] = None) -> float:
+        ck = self.register_class(device_class)
+        val = self._true_tmin.get((app, ck))
         if val is None:
-            val = self._require_testbed().true_time(app, self.dvfs.max_clock)
-            self._true_tmin[app] = val
+            d = self._class_dvfs(ck)
+            val = self._require_testbed().true_time(
+                app, d.max_clock, dvfs=None if ck is None else d)
+            self._true_tmin[(app, ck)] = val
         return val
 
-    def true_t_dc(self, app: AppProfile) -> float:
-        val = self._true_tdc.get(app)
+    def true_t_dc(self, app: AppProfile,
+                  device_class: Optional[DeviceClass] = None) -> float:
+        ck = self.register_class(device_class)
+        val = self._true_tdc.get((app, ck))
         if val is None:
-            val = self._require_testbed().true_time(app,
-                                                    self.dvfs.default_clock)
-            self._true_tdc[app] = val
+            d = self._class_dvfs(ck)
+            val = self._require_testbed().true_time(
+                app, d.default_clock, dvfs=None if ck is None else d)
+            self._true_tdc[(app, ck)] = val
         return val

@@ -66,12 +66,12 @@ baseline the large-scale benchmark measures the prediction cache against.
 from __future__ import annotations
 
 import heapq
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
 from .correlate import CorrelationIndex
-from .dvfs import ClockPair, DVFSConfig
+from .dvfs import ClockPair, DeviceClass, DVFSConfig
 from .engine import EngineHooks, EventEngine, ExecutionRecord, ScheduleResult
 from .features import clock_features
 from .policies import (POLICIES as _POLICY_REGISTRY, Policy,
@@ -114,6 +114,7 @@ def run_schedule(
     service: PredictionService | None = None,
     hooks: EngineHooks | None = None,
     feedback: object | None = None,
+    device_classes: "Sequence[DeviceClass] | None" = None,
 ) -> ScheduleResult:
     """Event-driven schedule execution on the simulated testbed.
 
@@ -133,6 +134,12 @@ def run_schedule(
     :class:`~repro.core.online.OnlineAdapter` attached to ``service`` —
     called after every completion (measurement-feedback loop). ``None``
     (default) keeps the frozen, bit-identical-to-legacy path.
+
+    ``device_classes``: an explicit (possibly heterogeneous) pool — one
+    :class:`~repro.core.dvfs.DeviceClass` per device, positional; overrides
+    ``n_devices``. A pool with one distinct class reproduces the classless
+    engine bit-identically (equivalence-tested); a mixed pool turns every
+    decision into a joint (device class, clock) choice.
     """
     if isinstance(policy, Policy):
         pol, policy = policy, policy.name
@@ -154,21 +161,28 @@ def run_schedule(
     if policy in ("d-dvfs", "min-energy", "risk-aware") and predictor is None:
         raise ValueError(f"policy {policy!r} needs a fitted predictor")
 
+    if device_classes is not None:
+        n_devices = len(device_classes)
+    # on a single-device pool the budget managers anchor on that device's
+    # class; None (classless or multi-device) keeps the legacy source
+    dc0 = (device_classes[0]
+           if device_classes is not None and n_devices == 1 else None)
+
     managers = []
     if queue_aware and n_devices == 1:
         # t_min source mirrors the legacy path: ground truth for the oracle,
         # the predictor when available, otherwise no cap
         if policy == "oracle":
             managers.append(QueueAwareBudget(
-                lambda j: service.true_t_min(j.app)))
+                lambda j: service.true_t_min(j.app, dc0)))
         elif predictor is not None and app_features is not None:
             managers.append(QueueAwareBudget(
-                lambda j: service.t_min(j.name)))
+                lambda j: service.t_min(j.name, dc0)))
     if virtual_pacing and policy not in ("dc", "mc") and n_devices == 1:
         if policy == "oracle" or app_features is None or predictor is None:
-            t_dc = lambda j: service.true_t_dc(j.app)       # noqa: E731
+            t_dc = lambda j: service.true_t_dc(j.app, dc0)  # noqa: E731
         else:
-            t_dc = lambda j: service.t_dc(j.name)           # noqa: E731
+            t_dc = lambda j: service.t_dc(j.name, dc0)      # noqa: E731
         managers.append(VirtualPacingBudget(t_dc, slack_share=slack_share))
 
     engine = EventEngine(
@@ -180,6 +194,7 @@ def run_schedule(
         hooks=hooks,
         seed=seed,
         feedback=feedback,
+        device_classes=device_classes,
     )
     return engine.run(jobs)
 

@@ -98,8 +98,9 @@ class Testbed:
     # ------------------------------------------------------------------ #
     #  Noiseless ground truth
     # ------------------------------------------------------------------ #
-    def true_time(self, app: AppProfile, clock: ClockPair) -> float:
-        d = self.dvfs
+    def true_time(self, app: AppProfile, clock: ClockPair,
+                  dvfs: Optional[DVFSConfig] = None) -> float:
+        d = dvfs or self.dvfs
         # effective throughputs at this clock
         flops_rate = d.peak_flops * clock.s_core * app.core_eff
         # dependency stalls make a fraction of compute insensitive to clock
@@ -121,24 +122,29 @@ class Testbed:
             s = app.spike * float(np.exp(-((clock.s_core - c) ** 2) / (2 * width ** 2)))
         return t_base * (1.0 + w + s) + app.overhead_s
 
-    def _utilizations(self, app: AppProfile, clock: ClockPair, t_total: float):
-        d = self.dvfs
+    def _utilizations(self, app: AppProfile, clock: ClockPair, t_total: float,
+                      dvfs: Optional[DVFSConfig] = None):
+        d = dvfs or self.dvfs
         t_busy_core = app.flops / (d.peak_flops * clock.s_core * app.core_eff)
         t_busy_mem = app.hbm_bytes / (d.hbm_bw * clock.s_mem * app.mem_eff)
         u_core = min(t_busy_core / max(t_total, 1e-12), 1.0)
         u_mem = min(t_busy_mem / max(t_total, 1e-12), 1.0)
         return u_core, u_mem
 
-    def true_power(self, app: AppProfile, clock: ClockPair) -> float:
-        t = self.true_time(app, clock)
-        u_core, u_mem = self._utilizations(app, clock, t)
-        base = self.dvfs.power(clock, u_core, u_mem)
+    def true_power(self, app: AppProfile, clock: ClockPair,
+                   dvfs: Optional[DVFSConfig] = None) -> float:
+        d = dvfs or self.dvfs
+        t = self.true_time(app, clock, dvfs=d)
+        u_core, u_mem = self._utilizations(app, clock, t, dvfs=d)
+        base = d.power(clock, u_core, u_mem)
         w = _wiggle(app.seed * 15485863 + 29, app.wiggle_power,
                     clock.s_core, clock.s_mem)
         return base * (1.0 + w)
 
-    def true_energy(self, app: AppProfile, clock: ClockPair) -> float:
-        return self.true_time(app, clock) * self.true_power(app, clock)
+    def true_energy(self, app: AppProfile, clock: ClockPair,
+                    dvfs: Optional[DVFSConfig] = None) -> float:
+        return (self.true_time(app, clock, dvfs=dvfs)
+                * self.true_power(app, clock, dvfs=dvfs))
 
     # ------------------------------------------------------------------ #
     #  Measured (noisy) execution — what the scheduler observes
@@ -148,17 +154,25 @@ class Testbed:
         app: AppProfile,
         clock: ClockPair,
         rng: Optional[np.random.Generator] = None,
+        dvfs: Optional[DVFSConfig] = None,
     ) -> Measurement:
         rng = rng or self._rng
-        t = self.true_time(app, clock) * (1 + self.noise * rng.normal())
-        p = self.true_power(app, clock) * (1 + self.noise * rng.normal())
+        # one time draw then one power draw per execution, regardless of
+        # which device class runs the job — the engine's determinism
+        # invariant (dispatch order alone fixes the RNG stream)
+        t = self.true_time(app, clock, dvfs=dvfs) * (
+            1 + self.noise * rng.normal())
+        p = self.true_power(app, clock, dvfs=dvfs) * (
+            1 + self.noise * rng.normal())
         return Measurement(time_s=max(t, 1e-6), power_w=max(p, 1.0))
 
     # ------------------------------------------------------------------ #
-    def sweep(self, app: AppProfile, clocks=None) -> dict:
+    def sweep(self, app: AppProfile, clocks=None,
+              dvfs: Optional[DVFSConfig] = None) -> dict:
         """Exhaustive noiseless sweep (paper's profiling campaign)."""
-        clocks = clocks or self.dvfs.clock_list()
+        clocks = clocks or (dvfs or self.dvfs).clock_list()
         return {
-            c.key(): Measurement(self.true_time(app, c), self.true_power(app, c))
+            c.key(): Measurement(self.true_time(app, c, dvfs=dvfs),
+                                 self.true_power(app, c, dvfs=dvfs))
             for c in clocks
         }

@@ -21,11 +21,11 @@ import dataclasses
 
 import numpy as np
 
-from .dvfs import DVFSConfig
+from .dvfs import DeviceClass, DVFSConfig
 from .simulator import AppProfile, Testbed
 
 __all__ = ["Job", "make_workload", "stream_workload", "drifting_workload",
-           "drift_profile"]
+           "drift_profile", "make_device_pool", "heterogeneous_workload"]
 
 
 @dataclasses.dataclass
@@ -110,6 +110,67 @@ def stream_workload(
         dev_free[dev] = done
         slack = float(rng.uniform(*slack_range)) * t_dc[idx]
         yield Job(app=apps[idx], arrival=now, deadline=float(done + slack),
+                  job_id=jid)
+
+
+def make_device_pool(*spec: tuple[DeviceClass, int]) -> list[DeviceClass]:
+    """Flatten a ``(DeviceClass, count)`` spec into the positional pool the
+    engine consumes: ``make_device_pool((V5P_CLASS, 2), (V5E_CLASS, 4))``
+    → ``[v5p, v5p, v5e, v5e, v5e, v5e]``. Device indices are positions in
+    this list — spec order is dispatch tie-break order."""
+    pool: list[DeviceClass] = []
+    for cls, count in spec:
+        if count < 0:
+            raise ValueError(f"negative device count for {cls.name!r}")
+        pool.extend([cls] * count)
+    if not pool:
+        raise ValueError("empty device pool")
+    return pool
+
+
+def heterogeneous_workload(
+    apps: list[AppProfile],
+    testbed: Testbed,
+    pool: list[DeviceClass],
+    n_jobs: int = 1000,
+    seed: int = 0,
+    mean_interarrival: float | None = None,
+    slack_range: tuple[float, float] = (0.25, 1.0),
+    utilization: float = 0.8,
+):
+    """:func:`stream_workload` generalized to a heterogeneous pool.
+
+    Deadlines keep the DC-anchoring guarantee *on the mixed pool*: a
+    virtual default-clock schedule dispatches each job to the
+    earliest-free virtual device (tie-break: pool position, mirroring the
+    engine) and the deadline is that device's completion plus a uniform
+    slack share of its class's default-clock time — so the pool-wide
+    "every device at its default clock" baseline stays approximately
+    schedulable at the configured ``utilization``. The same job list can
+    then be replayed against uniform single-class pools for paired
+    comparisons (the bench_hetero protocol)."""
+    rng = np.random.default_rng(seed)
+    t_dc: dict[str, np.ndarray] = {}
+    for cls in pool:
+        if cls.name not in t_dc:
+            t_dc[cls.name] = np.array([
+                testbed.true_time(a, cls.dvfs.default_clock, dvfs=cls.dvfs)
+                for a in apps])
+    if mean_interarrival is None:
+        # aggregate DC throughput: each device serves 1/mean(t_dc) jobs/s
+        rate = sum(1.0 / float(t_dc[cls.name].mean()) for cls in pool)
+        mean_interarrival = 1.0 / (rate * utilization)
+    dev_free = np.zeros(len(pool))
+    now = 0.0
+    for jid in range(n_jobs):
+        now += float(rng.exponential(mean_interarrival))
+        idx = int(rng.integers(len(apps)))
+        dev = int(np.argmin(dev_free))      # virtual DC dispatch
+        t_cls = float(t_dc[pool[dev].name][idx])
+        done = max(float(dev_free[dev]), now) + t_cls
+        dev_free[dev] = done
+        slack = float(rng.uniform(*slack_range)) * t_cls
+        yield Job(app=apps[idx], arrival=now, deadline=done + slack,
                   job_id=jid)
 
 

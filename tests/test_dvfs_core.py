@@ -10,9 +10,9 @@ except ImportError:  # not installed in this container — deterministic shim
 
 from repro.configs.paper_suite import PAPER_APPS
 from repro.core import (
-    AppProfile, ClockPair, CorrelationIndex, EnergyTimePredictor,
-    PredictorConfig, Testbed, V5E_DVFS, build_dataset, loocv_rmse,
-    make_workload, profile_features, run_schedule,
+    AppProfile, ClockPair, CorrelationIndex, DEVICE_CLASSES,
+    EnergyTimePredictor, PredictorConfig, Testbed, V5E_DVFS, build_dataset,
+    loocv_rmse, make_workload, profile_features, run_schedule,
 )
 from repro.core.features import ALL_INPUT_NAMES, FEATURE_NAMES
 from repro.core.predictor import split_rmse
@@ -64,6 +64,66 @@ class TestDVFSModel:
     def test_peak_power_calibration(self):
         p = V5E_DVFS.power(V5E_DVFS.max_clock, 1.0, 1.0)
         assert 180 < p < 260  # v5e-class chip
+
+
+_ALL_CLASSES = tuple(DEVICE_CLASSES.values())
+
+
+class TestDeviceClassPowerModel:
+    """Property coverage of the DVFS/power model over *every* device
+    class's ladder and electrical model — the net the heterogeneity
+    refactor is held to."""
+
+    @settings(max_examples=15, deadline=None)
+    @given(cls=st.sampled_from(_ALL_CLASSES), u_step=st.integers(0, 4))
+    def test_property_power_nondecreasing_per_domain(self, cls, u_step):
+        """At any fixed utilization, chip power never decreases when either
+        clock domain steps up (V is nondecreasing in f, so V²·f is too)."""
+        d, u = cls.dvfs, u_step / 4.0
+        for m in sorted(d.mem_scales):
+            ps = [d.power(ClockPair(float(c), float(m)), u, u)
+                  for c in sorted(d.core_scales)]
+            assert all(b >= a - 1e-9 for a, b in zip(ps, ps[1:])), cls.name
+        for c in sorted(d.core_scales):
+            ps = [d.power(ClockPair(float(c), float(m)), u, u)
+                  for m in sorted(d.mem_scales)]
+            assert all(b >= a - 1e-9 for a, b in zip(ps, ps[1:])), cls.name
+
+    @settings(max_examples=15, deadline=None)
+    @given(cls=st.sampled_from(_ALL_CLASSES), u_step=st.integers(0, 4))
+    def test_property_voltage_floor_flat_p_region(self, cls, u_step):
+        """Frequencies on the shared low-voltage rail (paper §II-A) all
+        read v_floor, and power there grows only *linearly* in f — the
+        documented flat-P region: ΔP between plateau steps is exactly
+        a_core·v_floor²·Δf·g(u), with no V² term."""
+        d, u = cls.dvfs, u_step / 4.0
+        plateau = sorted(s for s in d.core_scales
+                         if d.voltage(float(s)) == d.v_floor)
+        assert len(plateau) >= 2, (
+            f"{cls.name} ladder never reaches the shared rail")
+        g = d.idle_core_frac + (1 - d.idle_core_frac) * u
+        m = float(d.mem_scales[0])
+        for s1, s2 in zip(plateau, plateau[1:]):
+            dp = (d.power(ClockPair(float(s2), m), u, u)
+                  - d.power(ClockPair(float(s1), m), u, u))
+            want = d.a_core * d.v_floor ** 2 * (float(s2) - float(s1)) * g
+            assert dp == pytest.approx(want, rel=1e-9, abs=1e-12), cls.name
+
+    @settings(max_examples=24, deadline=None)
+    @given(cls=st.sampled_from(_ALL_CLASSES),
+           idx=st.integers(0, len(PAPER_APPS) - 1))
+    def test_property_tables_finite_positive_every_ladder(self, cls, idx):
+        """Ground-truth time/power/energy stay finite and positive over the
+        full clock ladder of every device class, for every paper app."""
+        tb = Testbed(seed=0)
+        app = PAPER_APPS[idx]
+        for c in cls.dvfs.clock_list():
+            t = tb.true_time(app, c, dvfs=cls.dvfs)
+            p = tb.true_power(app, c, dvfs=cls.dvfs)
+            assert np.isfinite(t) and t > 0, (cls.name, app.name, c)
+            assert np.isfinite(p) and p > 0, (cls.name, app.name, c)
+            e = tb.true_energy(app, c, dvfs=cls.dvfs)
+            assert np.isfinite(e) and e > 0, (cls.name, app.name, c)
 
 
 class TestSimulator:

@@ -2,16 +2,24 @@
 correctness, policy/budget-manager equivalence with the legacy monolith
 (bit-for-bit, every policy, multiple seeds), and EventEngine streaming +
 multi-device behavior."""
+import functools
 import itertools
 
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # not installed in this container — deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
 from repro.configs.paper_suite import PAPER_APPS
 from repro.core import (
-    CorrelationIndex, EnergyTimePredictor, EngineHooks, EventEngine,
-    PredictionService, PredictorConfig, Testbed, V5E_DVFS, build_dataset,
-    make_workload, profile_features, run_schedule, stream_workload,
+    CorrelationIndex, EnergyTimePredictor, EngineHooks, EventEngine, Job,
+    PredictionService, PredictorConfig, Testbed, V5E_CLASS, V5E_DVFS,
+    V5LITE_CLASS, V5P_CLASS, build_dataset, heterogeneous_workload,
+    make_device_pool, make_workload, profile_features, run_schedule,
+    stream_workload,
 )
 from repro.core.features import clock_features
 from repro.core.gbdt import GBDTParams
@@ -363,3 +371,272 @@ class TestQueueAwareBudget:
                 cum += tmin[job_j.name]
                 want = min(want, dl_j - start - cum)
             assert got == pytest.approx(want, abs=1e-12)
+
+
+# ---------------------------------------------------------------------- #
+#  Heterogeneous pools
+# ---------------------------------------------------------------------- #
+class TestHeterogeneousPool:
+    def test_uniform_class_pool_bit_identical(self, testbed, fitted,
+                                              app_feats):
+        """The tentpole safety rail: an explicit pool of one device class
+        (the baseline chip) reproduces the classless engine's records
+        bit-identically — every policy, every field that carries
+        behavior."""
+        pool = [V5E_CLASS] * 3
+        kw = dict(predictor=fitted, app_features=app_feats)
+        for pol in POLICY_NAMES:
+            jobs = make_workload(APPS, testbed, seed=6)
+            a = run_schedule(jobs, pol, Testbed(seed=100), n_devices=3, **kw)
+            b = run_schedule(jobs, pol, Testbed(seed=100),
+                             device_classes=pool, **kw)
+            _assert_identical(a, b)
+            assert all(r.device_class == "v5e" for r in b.records)
+            assert all(r.device_class is None for r in a.records)
+
+    def test_uniform_single_device_pool_matches_legacy(self, testbed, fitted,
+                                                       app_feats):
+        """One-device explicit pool: budget managers (queue-aware +
+        virtual pacing) stay active and anchored on the pool's class —
+        records must still match the legacy monolith bit-for-bit."""
+        kw = dict(predictor=fitted, app_features=app_feats)
+        for pol in ("d-dvfs", "oracle"):
+            jobs = make_workload(APPS, testbed, seed=7)
+            a = legacy_run_schedule(jobs, pol, Testbed(seed=100), **kw)
+            b = run_schedule(jobs, pol, Testbed(seed=100),
+                             device_classes=[V5E_CLASS], **kw)
+            _assert_identical(a, b)
+
+    def test_mixed_pool_uses_every_class(self, testbed, fitted, app_feats):
+        pool = make_device_pool((V5P_CLASS, 1), (V5E_CLASS, 2),
+                                (V5LITE_CLASS, 1))
+        jobs = list(heterogeneous_workload(APPS, testbed, pool, n_jobs=80,
+                                           seed=0))
+        r = run_schedule(jobs, "min-energy", Testbed(seed=100),
+                         predictor=fitted, app_features=app_feats,
+                         device_classes=pool)
+        assert sorted(x.job_id for x in r.records) == sorted(
+            j.job_id for j in jobs)
+        assert {x.device_class for x in r.records} == {"v5e", "v5p",
+                                                       "v5lite"}
+        # the selected clock always belongs to the chosen class's ladder
+        # (or is its sprint clock), never another class's
+        for x in r.records:
+            dvfs = {"v5e": V5E_CLASS, "v5p": V5P_CLASS,
+                    "v5lite": V5LITE_CLASS}[x.device_class].dvfs
+            assert (x.clock in dvfs.clock_list()
+                    or x.clock == dvfs.max_clock)
+
+    def test_oracle_mixed_beats_uniform_baseline(self, testbed, fitted,
+                                                 app_feats):
+        """With ground-truth tables, joint placement on the mixed pool must
+        not lose energy vs. blindly running the same stream on the
+        earliest-free device (dc placement) of the same pool."""
+        pool = make_device_pool((V5P_CLASS, 2), (V5E_CLASS, 2),
+                                (V5LITE_CLASS, 2))
+        jobs = list(heterogeneous_workload(APPS, testbed, pool, n_jobs=80,
+                                           seed=1))
+        svc = PredictionService(V5E_DVFS, predictor=fitted,
+                                app_features=app_feats, testbed=testbed)
+        r_orc = run_schedule(jobs, "oracle", Testbed(seed=100), service=svc,
+                             device_classes=pool)
+        r_dc = run_schedule(jobs, "dc", Testbed(seed=100), service=svc,
+                            device_classes=pool)
+        assert r_orc.total_energy < r_dc.total_energy
+
+    def test_equal_free_time_tie_break(self, testbed):
+        """The free heap orders by (free_time, device_index) with the index
+        as the explicit tie-break: at t=0 every device is free, so the
+        first EDF job lands on device 0, the next on device 1, … in pool
+        construction order — regardless of which classes sit where (device
+        objects never enter the heap, so no TypeError on ties either)."""
+        for pool in ([V5LITE_CLASS, V5P_CLASS, V5E_CLASS, V5P_CLASS],
+                     [V5P_CLASS, V5LITE_CLASS, V5E_CLASS, V5LITE_CLASS]):
+            apps = APPS[:4]
+            jobs = [  # all arrive at 0 with strictly increasing deadlines
+                Job(app=apps[i], arrival=0.0, deadline=1e4 + i, job_id=i)
+                for i in range(4)
+            ]
+            r = run_schedule(jobs, "dc", Testbed(seed=100),
+                             device_classes=pool)
+            by_deadline = sorted(r.records, key=lambda x: x.deadline)
+            assert [x.device for x in by_deadline] == [0, 1, 2, 3]
+            assert [x.device_class for x in by_deadline] == [
+                c.name for c in pool]
+
+    def test_losing_candidate_keeps_true_free_time(self, testbed):
+        """When the queue is empty the decision time is bumped to the next
+        arrival; if the popped device then *loses* the joint decision it
+        must go back on the heap with its true free time, not the bumped
+        one — otherwise a later decision pops (and places work on) the
+        wrong device of a class."""
+        from repro.core.simulator import AppProfile
+        big = AppProfile(name="big", flops=5e14, hbm_bytes=1e12, seed=1)
+        tiny = AppProfile(name="tiny", flops=1e10, hbm_bytes=1e8, seed=2)
+        pool = [V5LITE_CLASS, V5P_CLASS, V5LITE_CLASS]
+        jobs = [   # oracle sends `big` to v5p (dev1), `tiny` to a v5lite
+            Job(app=big, arrival=0.0, deadline=40.0, job_id=0),
+            Job(app=big, arrival=50.0, deadline=90.0, job_id=1),
+            Job(app=tiny, arrival=200.0, deadline=400.0, job_id=2),
+        ]
+        r = run_schedule(jobs, "oracle", Testbed(seed=100),
+                         device_classes=pool)
+        by_id = {x.job_id: x for x in r.records}
+        assert by_id[0].device_class == by_id[1].device_class == "v5p"
+        assert by_id[2].device_class == "v5lite"
+        # dev0 was popped (and bumped) for jobs 0 and 1 but lost both joint
+        # decisions; it has been free since t=0, so the tie-break hands it
+        # job 2 — a corrupted push-back would route job 2 to dev2 instead
+        assert by_id[2].device == 0
+
+    def test_infeasible_everywhere_sprints_on_fastest_class(self):
+        """When no class has a feasible clock, candidates rank by predicted
+        sprint time — the engine should burn the miss on the fastest class,
+        not whichever device happened to free first."""
+        from repro.core.policies import DeviceCandidate, MinEnergy
+        from repro.core.prediction_service import ClockTable
+        pol = MinEnergy(V5E_DVFS)
+        slow_clocks = tuple(V5LITE_CLASS.dvfs.clock_list())
+        fast_clocks = tuple(V5P_CLASS.dvfs.clock_list())
+        slow = ClockTable(clocks=slow_clocks,
+                          P=np.full(len(slow_clocks), 50.0),
+                          T=np.linspace(40.0, 20.0, len(slow_clocks)))
+        fast = ClockTable(clocks=fast_clocks,
+                          P=np.full(len(fast_clocks), 200.0),
+                          T=np.linspace(9.0, 4.0, len(fast_clocks)))
+        job = Job(app=APPS[0], arrival=0.0, deadline=1.0, job_id=0)
+        cands = [DeviceCandidate(V5LITE_CLASS, 1.0, slow),
+                 DeviceCandidate(V5P_CLASS, 1.0, fast)]
+        i, sel = pol.select_device_clock(job, cands)
+        assert not sel.feasible
+        assert i == 1                       # the fast class eats the miss
+
+    def test_conflicting_class_names_rejected(self, fitted, app_feats,
+                                              testbed):
+        svc = PredictionService(V5E_DVFS, predictor=fitted,
+                                app_features=app_feats, testbed=testbed)
+        svc.table(APPS[0].name, V5P_CLASS)
+        impostor = V5P_CLASS.__class__("v5p", V5LITE_CLASS.dvfs)
+        with pytest.raises(ValueError, match="conflicting"):
+            svc.table(APPS[0].name, impostor)
+
+    def test_class_keyed_cache_build_once(self, fitted, app_feats, testbed):
+        """One table build per (app, device class); the baseline class
+        normalizes onto the classless cache entries (same objects)."""
+        svc = PredictionService(V5E_DVFS, predictor=fitted,
+                                app_features=app_feats, testbed=testbed)
+        for _ in range(3):
+            for a in APPS:
+                svc.table(a.name)
+                svc.table(a.name, V5E_CLASS)      # normalizes to None
+                svc.table(a.name, V5P_CLASS)
+                svc.table(a.name, V5LITE_CLASS)
+        assert svc.stats.table_builds == 3 * len(APPS)
+        a0 = APPS[0].name
+        assert svc.table(a0) is svc.table(a0, V5E_CLASS)
+        assert svc.table(a0, V5P_CLASS) is not svc.table(a0)
+        assert len(svc.table(a0, V5LITE_CLASS)) == len(
+            V5LITE_CLASS.dvfs.clock_list())
+
+
+# ---------------------------------------------------------------------- #
+#  Property-based engine invariants (heterogeneous pools)
+# ---------------------------------------------------------------------- #
+_PROP_POOLS = (
+    (V5E_CLASS, V5E_CLASS, V5E_CLASS),
+    (V5P_CLASS, V5E_CLASS, V5LITE_CLASS),
+    (V5LITE_CLASS, V5LITE_CLASS, V5P_CLASS, V5E_CLASS),
+    (V5P_CLASS, V5P_CLASS, V5LITE_CLASS, V5LITE_CLASS),
+)
+
+
+@functools.lru_cache(maxsize=1)
+def _prop_fixture():
+    """Module fixtures rebuilt as a plain cached function — property tests
+    must not take function-scoped pytest fixtures under real hypothesis."""
+    tb = Testbed(seed=0)
+    X, yp, yt, _ = build_dataset(APPS, tb, seed=0)
+    rng = np.random.default_rng(7)
+    return {
+        "testbed": tb,
+        "predictor": EnergyTimePredictor(SMALL).fit(X, yp, yt),
+        "features": {a.name: profile_features(a, tb, rng=rng)
+                     for a in APPS},
+    }
+
+
+class TestEngineProperties:
+    """Invariants that must hold for every pool composition, policy, and
+    seed — the systematic net under the heterogeneity refactor."""
+
+    def _run(self, pool, seed, policy, with_feedback=False):
+        f = _prop_fixture()
+        jobs = list(heterogeneous_workload(
+            APPS, f["testbed"], list(pool), n_jobs=40, seed=seed))
+        events: list[tuple[str, float]] = []
+
+        class _Recorder:
+            def observe(self, rec):
+                events.append(("obs", rec.end))
+
+        hooks = EngineHooks(
+            on_dispatch=lambda j, d, c, s: events.append(("dispatch", s)))
+        r = run_schedule(
+            jobs, policy, Testbed(seed=100 + seed),
+            predictor=f["predictor"], app_features=f["features"],
+            device_classes=list(pool), hooks=hooks,
+            feedback=_Recorder() if with_feedback else None)
+        return jobs, r, events
+
+    @settings(max_examples=8, deadline=None)
+    @given(pool_idx=st.integers(0, len(_PROP_POOLS) - 1),
+           seed=st.integers(0, 30),
+           policy=st.sampled_from(["dc", "min-energy"]))
+    def test_property_no_overlap_and_starts(self, pool_idx, seed, policy):
+        jobs, r, _ = self._run(_PROP_POOLS[pool_idx], seed, policy)
+        assert sorted(x.job_id for x in r.records) == sorted(
+            j.job_id for j in jobs)
+        for x in r.records:                     # start ≥ arrival, always
+            assert x.start >= x.arrival - 1e-9
+        by_dev: dict[int, list] = {}
+        for x in r.records:
+            by_dev.setdefault(x.device, []).append((x.start, x.end))
+        for spans in by_dev.values():           # no overlap per device
+            spans.sort()
+            for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+                assert s2 >= e1 - 1e-9
+
+    @settings(max_examples=8, deadline=None)
+    @given(pool_idx=st.integers(0, len(_PROP_POOLS) - 1),
+           seed=st.integers(0, 30),
+           policy=st.sampled_from(["dc", "min-energy"]))
+    def test_property_edf_among_admitted(self, pool_idx, seed, policy):
+        """If job b had arrived when job a was dispatched and b is
+        dispatched strictly later, EDF demands deadline(a) ≤ deadline(b)
+        (every job with arrival ≤ a.start is admitted by a's decision)."""
+        _, r, _ = self._run(_PROP_POOLS[pool_idx], seed, policy)
+        recs = sorted(r.records, key=lambda x: x.start)
+        for i, a in enumerate(recs):
+            for b in recs[i + 1:]:
+                if b.start > a.start + 1e-12 and b.arrival <= a.start:
+                    assert a.deadline <= b.deadline + 1e-9
+
+    @settings(max_examples=6, deadline=None)
+    @given(pool_idx=st.integers(0, len(_PROP_POOLS) - 1),
+           seed=st.integers(0, 30))
+    def test_property_feedback_causality(self, pool_idx, seed):
+        """No observation is delivered to a decision earlier in simulated
+        time: every delivered measurement's end time precedes the next
+        dispatch decision's start."""
+        _, _, events = self._run(_PROP_POOLS[pool_idx], seed, "min-energy",
+                                 with_feedback=True)
+        assert any(kind == "obs" for kind, _ in events)
+        next_dispatch_start = [None] * len(events)
+        upcoming = None
+        for i in range(len(events) - 1, -1, -1):
+            next_dispatch_start[i] = upcoming
+            if events[i][0] == "dispatch":
+                upcoming = events[i][1]
+        for (kind, t), nxt in zip(events, next_dispatch_start):
+            if kind == "obs" and nxt is not None:
+                assert t <= nxt + 1e-9

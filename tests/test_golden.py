@@ -1,0 +1,140 @@
+"""Golden-trace regression suite.
+
+The equivalence tests in tests/test_engine.py compare two *live* code paths
+(new stack vs. retained legacy monolith) — they cannot catch a change that
+drifts both paths together (a simulator tweak, a predictor refactor, an RNG
+reordering). This suite pins the actual behavior: compact JSON traces of a
+canonical 12-job run (one job per paper app), per policy × seed, checked in
+under ``tests/golden/`` with a sha256 digest each. A fresh run must
+reproduce every stored record exactly.
+
+When a behavior change is *intentional*, regenerate with::
+
+    PYTHONPATH=src python scripts/regen_golden.py
+
+and review the trace diff like any other code change — the diff IS the
+behavior change.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_suite import PAPER_APPS
+from repro.core import (EnergyTimePredictor, PredictorConfig, Testbed,
+                        build_dataset, make_workload, profile_features,
+                        run_schedule)
+from repro.core.gbdt import GBDTParams
+from repro.core.policies import POLICY_NAMES
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / \
+    "schedule_traces.json"
+
+#: Canonical scenario: every paper app once (the paper's own 12-job
+#: workload scale), two workload seeds, all six policies, single device,
+#: default budget managers. The predictor config is fixed here — goldens
+#: pin (predictor ∘ scheduler ∘ simulator) end to end.
+SEEDS = (0, 1)
+_GBDT = dict(iterations=80, depth=3, learning_rate=0.15)
+PREDICTOR_CONFIG = PredictorConfig(
+    gbdt=GBDTParams(l2_leaf_reg=5.0, **_GBDT),
+    gbdt_time=GBDTParams(l2_leaf_reg=3.0, **_GBDT),
+)
+
+_CACHE: dict = {}
+
+
+def _fixture():
+    if not _CACHE:
+        tb = Testbed(seed=0)
+        apps = list(PAPER_APPS)
+        X, yp, yt, _ = build_dataset(apps, tb, seed=0)
+        rng = np.random.default_rng(7)
+        _CACHE.update(
+            testbed=tb, apps=apps,
+            features={a.name: profile_features(a, tb, rng=rng)
+                      for a in apps},
+            predictor=EnergyTimePredictor(PREDICTOR_CONFIG).fit(X, yp, yt))
+    return _CACHE
+
+
+def _round(x: float) -> float:
+    """12 significant digits: stable against last-ulp float noise, far
+    below anything a real behavior change could hide in."""
+    return float(f"{x:.12g}")
+
+
+def trace_of(records) -> list[list]:
+    """Compact, JSON-stable projection of an ExecutionRecord stream."""
+    return [
+        [r.job_id, r.name, r.device, r.clock.core_mhz, r.clock.mem_mhz,
+         _round(r.start), _round(r.end), _round(r.time_s),
+         _round(r.power_w), _round(r.energy_j),
+         int(r.met_deadline), int(r.had_feasible_clock)]
+        for r in records
+    ]
+
+
+def digest_of(trace: list[list]) -> str:
+    blob = json.dumps(trace, separators=(",", ":"), sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def compute_traces() -> dict:
+    """Fresh traces for every policy × seed of the canonical scenario
+    (computed once per process — the parametrized tests share one pass)."""
+    if "traces" in _CACHE:
+        return _CACHE["traces"]
+    f = _fixture()
+    out: dict[str, dict] = {}
+    for policy in POLICY_NAMES:
+        for seed in SEEDS:
+            jobs = make_workload(f["apps"], f["testbed"], seed=seed)
+            r = run_schedule(jobs, policy, Testbed(seed=100 + seed),
+                             predictor=f["predictor"],
+                             app_features=f["features"])
+            trace = trace_of(r.records)
+            out[f"{policy}|{seed}"] = {"digest": digest_of(trace),
+                                       "records": trace}
+    _CACHE["traces"] = out
+    return out
+
+
+def load_golden() -> dict:
+    with open(GOLDEN_PATH) as fh:
+        return json.load(fh)
+
+
+_COLUMNS = ("job_id", "name", "device", "core_mhz", "mem_mhz", "start",
+            "end", "time_s", "power_w", "energy_j", "met_deadline",
+            "had_feasible_clock")
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_golden_trace(policy, seed):
+    """Fresh canonical run == checked-in trace, record for record."""
+    key = f"{policy}|{seed}"
+    golden = load_golden()["traces"][key]
+    fresh = compute_traces()[key]
+    for i, (got, want) in enumerate(zip(fresh["records"],
+                                        golden["records"])):
+        assert got == want, (
+            f"{key} record {i} drifted "
+            f"(columns: {_COLUMNS}):\n got {got}\nwant {want}")
+    assert len(fresh["records"]) == len(golden["records"])
+    assert fresh["digest"] == golden["digest"]
+
+
+def test_golden_file_is_self_consistent():
+    """Stored digests match the stored records (catches hand-edits)."""
+    g = load_golden()
+    assert set(g["traces"]) == {f"{p}|{s}" for p in POLICY_NAMES
+                                for s in SEEDS}
+    for key, entry in g["traces"].items():
+        assert digest_of(entry["records"]) == entry["digest"], key
+        assert len(entry["records"]) == len(PAPER_APPS), key

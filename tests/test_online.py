@@ -17,8 +17,10 @@ from repro.configs.paper_suite import PAPER_APPS
 from repro.core import (
     DriftConfig, DriftDetector, EnergyTimePredictor, GBDTCorrector,
     Observation, ObservationStore, OnlineAdapter, PredictionService,
-    PredictorConfig, RiskAware, RLSCorrector, Testbed, V5E_DVFS,
-    build_dataset, drifting_workload, profile_features, run_schedule,
+    PredictorConfig, RiskAware, RLSCorrector, Testbed, V5E_CLASS, V5E_DVFS,
+    V5LITE_CLASS, V5P_CLASS, build_dataset, drifting_workload,
+    heterogeneous_workload, make_device_pool, profile_features,
+    run_schedule,
 )
 from repro.core.gbdt import GBDTParams
 from repro.core.online import clock_basis
@@ -531,3 +533,69 @@ class TestFeedbackCausality:
         # dispatch order differs from completion order on 4 devices — the
         # test would be vacuous otherwise
         assert [x.end for x in r.records] != rec.ends
+
+
+class TestHeterogeneousAdapter:
+    """The feedback loop on a mixed device pool: per-(app, class) keying
+    and the frozen-path guarantee."""
+
+    POOL_SPEC = ((V5P_CLASS, 1), (V5E_CLASS, 1), (V5LITE_CLASS, 1))
+
+    def test_disabled_adapter_bit_identical_on_mixed_pool(
+            self, fitted, app_feats, testbed):
+        pool = make_device_pool(*self.POOL_SPEC)
+        jobs = list(heterogeneous_workload(APPS, testbed, pool, n_jobs=60,
+                                           seed=0))
+        svc = _service(fitted, app_feats, testbed)
+        r_frozen = run_schedule(jobs, "min-energy", Testbed(seed=100),
+                                service=svc, device_classes=pool)
+        svc2 = _service(fitted, app_feats, testbed)
+        ad = OnlineAdapter(svc2, enabled=False)
+        r_off = run_schedule(jobs, "min-energy", Testbed(seed=100),
+                             service=svc2, device_classes=pool, feedback=ad)
+        assert r_off.records == r_frozen.records
+        assert ad.n_observed == 0
+
+    def test_observations_filed_per_app_class(self, fitted, app_feats,
+                                              testbed):
+        """Corrections/statistics are keyed ``app::class`` on explicit
+        classes; the baseline class (same dvfs as the service) normalizes
+        onto the plain app-name key — shared with the classless path."""
+        pool = make_device_pool(*self.POOL_SPEC)
+        jobs = list(heterogeneous_workload(APPS, testbed, pool, n_jobs=60,
+                                           seed=1))
+        svc = _service(fitted, app_feats, testbed)
+        ad = OnlineAdapter(svc, drift=None)
+        r = run_schedule(jobs, "min-energy", Testbed(seed=100), service=svc,
+                         device_classes=pool, feedback=ad)
+        assert ad.n_observed == len(jobs)   # every clock was on-ladder
+        keys = set(ad.store._stats)
+        used = {x.device_class for x in r.records}
+        assert len(used) > 1                # pool actually mixed
+        for cls_name in used - {"v5e"}:
+            assert any(k.endswith(f"::{cls_name}") for k in keys), cls_name
+        if "v5e" in used:
+            assert any("::" not in k for k in keys)
+        # per-app margin aggregates over the app's class keys
+        for app in APPS:
+            assert 0.0 <= ad.margin(app.name) <= ad.max_margin
+
+    def test_table_free_policy_still_resolves_classes(self, fitted,
+                                                      app_feats, testbed):
+        """dc/mc never fetch tables, so the engine registers the pool's
+        classes with the service at init — observations must still be
+        filed per (app, class) against the right base table, not
+        misattributed to the baseline ladder."""
+        pool = make_device_pool(*self.POOL_SPEC)
+        jobs = list(heterogeneous_workload(APPS, testbed, pool, n_jobs=30,
+                                           seed=2))
+        svc = _service(fitted, app_feats, testbed)
+        ad = OnlineAdapter(svc, drift=None)
+        r = run_schedule(jobs, "mc", Testbed(seed=100), service=svc,
+                         device_classes=pool, feedback=ad)
+        assert ad.n_observed == len(jobs)
+        keys = set(ad.store._stats)
+        used = {x.device_class for x in r.records}
+        for cls_name in used - {"v5e"}:
+            assert any(k.endswith(f"::{cls_name}") for k in keys), cls_name
+        assert not any(k.endswith("::v5e") for k in keys)  # normalized
