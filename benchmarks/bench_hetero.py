@@ -107,15 +107,16 @@ def hetero_fixtures(smoke: bool) -> dict:
 
 def idle_energy_j(result, pool) -> float:
     """Pool-level idle energy: each device burns its class's idle power
-    (``DeviceClass.idle_power_w``) whenever it is not executing a job,
-    from t=0 to the pool makespan. Job energy already covers busy time —
-    this is the other half of the fleet's bill, and it is what penalizes
-    parking work-starved big chips in a mixed pool."""
+    (``DeviceClass.idle_power()``, the shared truth-path accessor)
+    whenever it is not executing a job, from t=0 to the pool makespan.
+    Job energy already covers busy time — this is the other half of the
+    fleet's bill, and it is what penalizes parking work-starved big chips
+    in a mixed pool."""
     makespan = result.makespan
     busy = [0.0] * len(pool)
     for r in result.records:
         busy[r.device] += r.time_s
-    return sum(cls.idle_power_w * max(makespan - b, 0.0)
+    return sum(cls.idle_power() * max(makespan - b, 0.0)
                for cls, b in zip(pool, busy))
 
 

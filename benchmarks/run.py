@@ -35,6 +35,8 @@ BENCHES = [
      "Beyond paper: measurement feedback on a drifting stream"),
     ("hetero", "benchmarks.bench_hetero",
      "Beyond paper: heterogeneous device-class pool, joint placement"),
+    ("powercap", "benchmarks.bench_powercap",
+     "Beyond paper: cluster power cap — telemetry ledger + grant policies"),
     ("kernels", "benchmarks.bench_kernels",
      "Kernel micro-benchmarks"),
     ("roofline", "benchmarks.bench_roofline",
@@ -42,11 +44,24 @@ BENCHES = [
 ]
 
 
+def list_benches() -> None:
+    """Print every registered bench key with its one-line description."""
+    width = max(len(key) for key, _, _ in BENCHES)
+    for key, module, title in BENCHES:
+        print(f"{key:<{width}}  {title}  [{module}]")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated bench keys")
+                    help="comma-separated bench keys (see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered bench keys with descriptions "
+                         "and exit")
     args = ap.parse_args()
+    if args.list:
+        list_benches()
+        return
     only = None
     if args.only is not None:
         only = {k for k in args.only.split(",") if k}
@@ -54,7 +69,8 @@ def main() -> None:
         unknown = only - valid
         if unknown or not only:
             ap.error(f"unknown bench key(s) {sorted(unknown)}; "
-                     f"valid keys: {sorted(valid)}")
+                     f"valid keys: {sorted(valid)} (--list for "
+                     "descriptions)")
 
     failures = []
     t_all = time.time()

@@ -20,6 +20,9 @@ python -m benchmarks.bench_online --smoke
 echo "=== smoke: heterogeneous-pool gate ==="
 python -m benchmarks.bench_hetero --smoke
 
+echo "=== smoke: power-cap gate ==="
+python -m benchmarks.bench_powercap --smoke
+
 echo "=== golden traces: behavior-drift gate ==="
 python -m pytest -q tests/test_golden.py
 

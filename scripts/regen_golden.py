@@ -26,7 +26,12 @@ def main() -> None:
         "meta": {
             "scenario": "make_workload(PAPER_APPS) x seeds "
                         f"{list(test_golden.SEEDS)}, all policies, "
-                        "run_schedule defaults, Testbed(seed=100+seed)",
+                        "run_schedule defaults, Testbed(seed=100+seed); "
+                        f"plus {test_golden.CAP_KEY!r}: seed-0 workload, "
+                        f"min-energy, {test_golden.CAP_DEVICES} devices, "
+                        f"{test_golden.CAP_W:.0f}W PowerCapCoordinator "
+                        "(slack-weighted, guard "
+                        f"{test_golden.CAP_GUARD})",
             "regen": "PYTHONPATH=src python scripts/regen_golden.py",
             "columns": list(test_golden._COLUMNS),
         },

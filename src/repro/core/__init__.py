@@ -12,9 +12,9 @@ from .features import (ALL_INPUT_NAMES, CATEGORICAL_FEATURES, FEATURE_NAMES,
 from .predictor import (EnergyTimePredictor, PredictorConfig, loocv_rmse,
                         normalized_rmse)
 from .correlate import CorrelationIndex
-from .workload import (Job, drift_profile, drifting_workload,
-                       heterogeneous_workload, make_device_pool,
-                       make_workload, stream_workload)
+from .workload import (Job, cap_stress_workload, drift_profile,
+                       drifting_workload, heterogeneous_workload,
+                       make_device_pool, make_workload, stream_workload)
 from .prediction_service import ClockTable, PredictionService, ServiceStats
 from .policies import (BudgetManager, DeviceCandidate, Policy,
                        QueueAwareBudget, RiskAware, VirtualPacingBudget,
@@ -24,6 +24,8 @@ from .scheduler import (POLICIES, ScheduleResult, legacy_run_schedule,
                         run_schedule)
 from .online import (DriftConfig, DriftDetector, GBDTCorrector, Observation,
                      ObservationStore, OnlineAdapter, RLSCorrector)
+from .powercap import (GRANT_POLICIES, CoordinatorStats, PowerCapCoordinator,
+                       PowerSegment, PowerTelemetry)
 
 __all__ = [
     "ClockPair", "DVFSConfig", "V5E_DVFS",
@@ -35,7 +37,7 @@ __all__ = [
     "EnergyTimePredictor", "PredictorConfig", "loocv_rmse", "normalized_rmse",
     "CorrelationIndex", "Job", "make_workload", "stream_workload",
     "drifting_workload", "drift_profile",
-    "heterogeneous_workload", "make_device_pool",
+    "heterogeneous_workload", "make_device_pool", "cap_stress_workload",
     "ClockTable", "PredictionService", "ServiceStats",
     "BudgetManager", "DeviceCandidate", "Policy", "QueueAwareBudget",
     "RiskAware", "VirtualPacingBudget",
@@ -43,4 +45,6 @@ __all__ = [
     "POLICIES", "ScheduleResult", "run_schedule", "legacy_run_schedule",
     "Observation", "ObservationStore", "RLSCorrector", "GBDTCorrector",
     "DriftConfig", "DriftDetector", "OnlineAdapter",
+    "GRANT_POLICIES", "CoordinatorStats", "PowerCapCoordinator",
+    "PowerSegment", "PowerTelemetry",
 ]

@@ -164,6 +164,14 @@ class DeviceClass:
     bw_scale: float = 1.0         # HBM-bandwidth multiple of the baseline
     idle_power_w: float = V5E_DVFS.p_static
 
+    def idle_power(self) -> float:
+        """Draw (W) of a device of this class holding no job — the single
+        source of truth for idle intervals: the simulator's truth path
+        (:meth:`~repro.core.simulator.Testbed.idle_power`), the telemetry
+        ledger (:mod:`~repro.core.powercap`), and pool-level energy bills
+        (bench_hetero) all read the idle floor through this accessor."""
+        return self.idle_power_w
+
     @classmethod
     def derive(
         cls,

@@ -52,6 +52,13 @@ Invariants:
   that happens earlier in simulated time — even with many devices, where a
   job is *simulated* long before its end time. On one device this reduces
   to: the correction learned from job *n* is visible to job *n+1*.
+* **Power-cap identity.** With ``power_coordinator=None`` (the default)
+  no cap code runs; with a coordinator whose cap is infinite, every offer
+  is infinite, ladder filtering keeps every clock, and escalation/deferral
+  never fire — decisions and the RNG stream are bit-identical to the
+  capless engine (tests/test_powercap.py, bench_powercap). A finite cap
+  turns each dispatch into offer → filtered selection → (escalate →)
+  dispatch-or-defer → commit; see :mod:`repro.core.powercap`.
 """
 from __future__ import annotations
 
@@ -93,6 +100,20 @@ class ExecutionRecord:
     #: explicit pool stays ``==``-identical to the classless engine (the
     #: equivalence tests' contract).
     device_class: str | None = dataclasses.field(default=None, compare=False)
+    #: Power-cap provenance (PR 4), None on uncoordinated runs: the watts
+    #: the coordinator held for this dispatch (reclaims only shrink a
+    #: running grant, so this is the minimum held over the job's life —
+    #: which is why a granted-view telemetry ledger never sums above the
+    #: cap) and the device's realized peak draw while it ran (constant
+    #: per job in the current simulator, so it equals ``power_w`` —
+    #: carried separately because *grant vs realized peak* is the
+    #: reconciliation the ledger audits). compare=False, like
+    #: ``device_class``: with cap=∞ the records stay ``==``-identical to
+    #: the capless engine's (the benchmark's equivalence claim).
+    power_grant_w: float | None = dataclasses.field(default=None,
+                                                    compare=False)
+    power_peak_w: float | None = dataclasses.field(default=None,
+                                                   compare=False)
 
 
 @dataclasses.dataclass
@@ -185,6 +206,7 @@ class EventEngine:
         seed: int = 0,
         feedback: Optional[object] = None,
         device_classes: Optional[Sequence[DeviceClass]] = None,
+        power_coordinator: Optional[object] = None,
     ):
         self.testbed = testbed
         self.policy = resolve_policy(policy, testbed.dvfs)
@@ -209,6 +231,11 @@ class EventEngine:
         self.hooks = hooks or EngineHooks()
         self.seed = seed
         self.feedback = feedback
+        #: Optional cluster power-budget coordinator (duck-typed — see
+        #: :class:`~repro.core.powercap.PowerCapCoordinator`): consulted
+        #: before every dispatch for a per-device power grant that filters
+        #: the clock ladder. None (default) is the capless path, untouched.
+        self.power_coordinator = power_coordinator
         self.device_clocks: dict[int, Optional[ClockPair]] = {}
         if self.policy.table_kind != "none" and service is None:
             raise ValueError(
@@ -235,12 +262,55 @@ class EventEngine:
             return self.service.truth_table(job.app, device_class)
         return None
 
+    # -- power-cap plumbing (PR 4) ------------------------------------- #
+    def _idle_powers(self) -> list[float]:
+        """Per-device idle floor, positional — class accessor on explicit
+        pools, the testbed's truth-path floor on classless ones."""
+        if self.device_classes is not None:
+            return [c.idle_power() for c in self.device_classes]
+        return [self.testbed.idle_power()] * self.n_devices
+
+    def _coord_t_min_fn(self):
+        """``(job, device_class) -> s`` sprint-time estimate for the
+        coordinator's slack weights — the same source hierarchy the
+        budget managers use: ground truth for truth-table policies, the
+        predictor when fitted, else None (the coordinator then weights by
+        raw deadline slack). ``device_class`` is the dispatching device's
+        class (None for unplaced queue jobs), so on a mixed pool urgency
+        is judged against the right ladder."""
+        svc = self.service
+        if svc is None:
+            return None
+        if self.policy.table_kind == "truth" and svc.testbed is not None:
+            return lambda j, cls=None: svc.true_t_min(j.app, cls)
+        if svc.has_predictor:
+            return lambda j, cls=None: svc.t_min(j.name, cls)
+        return None
+
+    def _planned_power(self, sel, clock: ClockPair, table,
+                       dvfs) -> float:
+        """Watts the chosen clock is expected to draw — the commit size
+        (before guard inflation): the selection's own prediction when it
+        backs this clock, else the table row, else the model envelope."""
+        if sel.power is not None and sel.clock == clock:
+            return float(sel.power)
+        if table is not None:
+            try:
+                return float(table.P[table.clocks.index(clock)])
+            except ValueError:
+                pass
+        return self.policy.model_power(clock, dvfs)
+
     def run(self, jobs: Iterable[Job]) -> ScheduleResult:
         """Execute the stream to completion; returns per-job records."""
         stream = _ArrivalStream(jobs)
         rng = np.random.default_rng(self.seed)
         for bm in self.budget_managers:
             bm.reset()
+        coord = self.power_coordinator
+        if coord is not None:
+            coord.reset(self._idle_powers(), t_min_fn=self._coord_t_min_fn(),
+                        device_classes=self.device_classes)
         self.device_clocks = {dev: None for dev in range(self.n_devices)}
 
         # free-heap entries are always (free_time, device_index) — the
@@ -284,7 +354,12 @@ class EventEngine:
                 heapq.heappush(free, (free_t, dev))
                 continue
 
-            _, _, job = heapq.heappop(queue)       # EDF (paper line 5)
+            bm_snaps = None
+            if self.power_coordinator is not None and self.budget_managers:
+                # a capped decision may be rolled back (power deferral) —
+                # capture manager state before on_pop/apply mutate it
+                bm_snaps = [bm.snapshot() for bm in self.budget_managers]
+            dl_key, cnt_key, job = heapq.heappop(queue)  # EDF (paper line 5)
             for bm in self.budget_managers:
                 bm.on_pop(job)
             start = max(free_t, job.arrival)
@@ -294,14 +369,26 @@ class EventEngine:
             budget = job.deadline - start
             for bm in self.budget_managers:
                 budget = bm.apply(job, start, budget)
+            if coord is not None:
+                # release grants of jobs that ended by this decision —
+                # their devices revert to the idle floor
+                coord.advance(start)
+            grant = None
 
             # ---- joint (device, clock) decision ----------------------- #
             if not self._multi_class:
                 chosen_class = (self.device_classes[dev]
                                 if self.device_classes is not None else None)
-                sel = self.policy.select_for_class(
-                    job, budget, self._table_for(job, chosen_class),
-                    dvfs=None if chosen_class is None else chosen_class.dvfs)
+                tab = self._table_for(job, chosen_class)
+                cdvfs = None if chosen_class is None else chosen_class.dvfs
+                if coord is None:
+                    sel = self.policy.select_for_class(job, budget, tab,
+                                                       dvfs=cdvfs)
+                else:
+                    grant = coord.offer(dev, job, start, queue)
+                    sel, needed = self.policy.select_capped(
+                        job, budget, tab, dvfs=cdvfs, grant=grant,
+                        guard=coord.guard)
             else:
                 # every device free by `start` could start this job at
                 # `start` with the same budget; pop them (heap yields
@@ -320,8 +407,14 @@ class EventEngine:
                         continue
                     seen.add(cls.name)
                     reps.append(ent)
-                    cands.append(DeviceCandidate(
-                        cls, budget, self._table_for(job, cls)))
+                    if coord is None:
+                        cands.append(DeviceCandidate(
+                            cls, budget, self._table_for(job, cls)))
+                    else:
+                        cands.append(DeviceCandidate(
+                            cls, budget, self._table_for(job, cls),
+                            power_cap=coord.offer(ent[1], job, start, queue),
+                            guard=coord.guard))
                 ci, sel = self.policy.select_device_clock(job, cands)
                 chosen = reps[ci]
                 for ent in entries:
@@ -329,13 +422,65 @@ class EventEngine:
                         heapq.heappush(free, ent)
                 free_t, dev = chosen     # start is unchanged: free_t<=start
                 chosen_class = self.device_classes[dev]
+                tab = cands[ci].table
+                cdvfs = chosen_class.dvfs
+                needed = None
+                if coord is not None:
+                    # recover the escalation target for the chosen class
+                    # (select_device_clock discards it) — unconditionally:
+                    # table-free policies report a rescue need alongside a
+                    # *feasible* least-overdraw fallback, exactly like the
+                    # single-class path
+                    grant = cands[ci].power_cap
+                    sel, needed = self.policy.select_capped(
+                        job, budget, tab, dvfs=cdvfs, grant=grant,
+                        guard=coord.guard)
+
+            if (coord is not None and needed is not None
+                    and needed > grant):
+                # deadline rescue: reclaim granted-but-unused headroom
+                # and retry with whatever the coordinator can free up
+                raised = coord.escalate(dev, needed, start)
+                if raised > grant:
+                    grant = raised
+                    sel, _ = self.policy.select_capped(
+                        job, budget, tab, dvfs=cdvfs, grant=grant,
+                        guard=coord.guard)
 
             run_dvfs = None if chosen_class is None else chosen_class.dvfs
             clock = sel.clock
             if clock is None:
                 # sprint at the chosen class's max clock (see scheduler
-                # docstring — the engine never drops work)
-                clock = (d if run_dvfs is None else run_dvfs).max_clock
+                # docstring — the engine never drops work); under a cap,
+                # sprint as fast as the grant allows instead
+                if coord is None:
+                    clock = (d if run_dvfs is None else run_dvfs).max_clock
+                else:
+                    clock = self.policy.sprint_clock(
+                        tab, dvfs=run_dvfs, grant=grant, guard=coord.guard)
+            plan_w = None
+            if coord is not None:
+                plan_w = self._planned_power(
+                    sel, clock, tab, d if run_dvfs is None else run_dvfs)
+                if plan_w * (1 + coord.guard) > grant + 1e-9:
+                    # power deferral: not even this clock fits the
+                    # cluster's remaining headroom (post-escalation). If a
+                    # running grant will release later, wait for it: the
+                    # job returns to the EDF queue (original key — order
+                    # preserved), the device re-offers at the release, and
+                    # the budget managers forget this decision. With no
+                    # grant outstanding the cluster is as empty as it gets
+                    # — dispatch anyway rather than livelock (commit
+                    # clamps; the overage lands in stats.violations).
+                    wait_t = coord.next_release(start)
+                    if wait_t is not None:
+                        if bm_snaps is not None:
+                            for bm, snap in zip(self.budget_managers,
+                                                bm_snaps):
+                                bm.restore(snap)
+                        heapq.heappush(queue, (dl_key, cnt_key, job))
+                        heapq.heappush(free, (wait_t, dev))
+                        continue
             if self.hooks.on_dispatch:
                 self.hooks.on_dispatch(job, dev, clock, start)
             self.device_clocks[dev] = clock
@@ -352,7 +497,15 @@ class EventEngine:
                 had_feasible_clock=sel.feasible,
                 device_class=(None if chosen_class is None
                               else chosen_class.name),
+                power_peak_w=None if coord is None else meas.power_w,
             )
+            if coord is not None:
+                # the coordinator fills rec.power_grant_w and keeps it in
+                # sync when later rescues reclaim part of the grant
+                coord.commit(
+                    dev, max(plan_w * (1 + coord.guard),
+                             coord.idle_of(dev)),
+                    end, meas.power_w, record=rec)
             records.append(rec)
             if self.hooks.on_complete:
                 self.hooks.on_complete(rec)

@@ -60,7 +60,7 @@ Invariants (the contracts tests/test_online.py and tests/test_engine.py pin):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -167,6 +167,8 @@ class PredictionService:
         self._true_tmin: dict[tuple, float] = {}
         self._true_tdc: dict[tuple, float] = {}
         self._classes: dict[str, DeviceClass] = {}
+        self._ladder_index: dict[
+            Optional[str], dict[ClockPair, int]] = {}
         self._class_keys: dict[str, Optional[str]] = {}
         self._seen_class_dvfs: dict[str, DVFSConfig] = {}
         self._class_clocks: dict[
@@ -301,6 +303,30 @@ class PredictionService:
         self._corrected[(name, ck)] = tab
         self.stats.corrected_builds += 1
         return tab
+
+    def power_at(self, name: str,
+                 device_class: Optional[DeviceClass] = None,
+                 clocks: Optional[Sequence[ClockPair]] = None) -> np.ndarray:
+        """Vectorized predicted power for ``(app, class)`` at ``clocks``
+        (default: the class's full ladder) — the power-cap subsystem's
+        name-keyed analysis view (cap sizing, predicted-draw
+        reconciliation against the telemetry ledger; see bench_powercap).
+        Pure table lookup over the same cached rows the engine's cap
+        filter reads in-table: the first call per (app, class) builds the
+        ladder table, every later call (any clock subset, any order)
+        indexes into it — no predictor invocations, so cap arithmetic
+        stays as cheap as a scheduling decision."""
+        tab = self.table(name, device_class)
+        if clocks is None:
+            return tab.P
+        ck = self.register_class(device_class)
+        index = self._ladder_index.get(ck)
+        if index is None:
+            index = {c: i for i, c in enumerate(self.clocks_for(ck))}
+            self._ladder_index[ck] = index
+        rows = np.fromiter((index[c] for c in clocks), dtype=np.intp,
+                           count=len(clocks))
+        return tab.P[rows]
 
     # ------------------------------------------------------------------ #
     #  Online correction layer

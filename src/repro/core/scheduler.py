@@ -115,6 +115,7 @@ def run_schedule(
     hooks: EngineHooks | None = None,
     feedback: object | None = None,
     device_classes: "Sequence[DeviceClass] | None" = None,
+    power_coordinator: object | None = None,
 ) -> ScheduleResult:
     """Event-driven schedule execution on the simulated testbed.
 
@@ -140,6 +141,13 @@ def run_schedule(
     ``n_devices``. A pool with one distinct class reproduces the classless
     engine bit-identically (equivalence-tested); a mixed pool turns every
     decision into a joint (device class, clock) choice.
+
+    ``power_coordinator``: a
+    :class:`~repro.core.powercap.PowerCapCoordinator` enforcing a
+    cluster-wide power cap — every dispatch is granted a per-device power
+    budget and the clock ladder is filtered to clocks fitting the grant.
+    ``None`` (default) and cap=∞ both reproduce the capless engine
+    bit-identically.
     """
     if isinstance(policy, Policy):
         pol, policy = policy, policy.name
@@ -195,6 +203,7 @@ def run_schedule(
         seed=seed,
         feedback=feedback,
         device_classes=device_classes,
+        power_coordinator=power_coordinator,
     )
     return engine.run(jobs)
 

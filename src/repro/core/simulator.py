@@ -26,7 +26,7 @@ from typing import Optional
 
 import numpy as np
 
-from .dvfs import ClockPair, DVFSConfig, V5E_DVFS
+from .dvfs import ClockPair, DeviceClass, DVFSConfig, V5E_DVFS
 
 __all__ = ["AppProfile", "Measurement", "Testbed"]
 
@@ -145,6 +145,22 @@ class Testbed:
                     dvfs: Optional[DVFSConfig] = None) -> float:
         return (self.true_time(app, clock, dvfs=dvfs)
                 * self.true_power(app, clock, dvfs=dvfs))
+
+    def idle_power(self, device_class: Optional[DeviceClass] = None,
+                   dvfs: Optional[DVFSConfig] = None) -> float:
+        """Truth-path draw of a device holding no job.
+
+        A device's power over simulated time is piecewise constant: *busy*
+        intervals draw :meth:`true_power` (what :meth:`run` measures for
+        each execution), *idle* intervals draw this floor. Explicit pools
+        delegate to :meth:`DeviceClass.idle_power` — the single source of
+        truth shared with the telemetry ledger and the pool-level energy
+        accounting — while classless devices idle at their config's static
+        floor (leakage + board overhead; the clock-tree terms gate to zero
+        with no work resident)."""
+        if device_class is not None:
+            return device_class.idle_power()
+        return (dvfs or self.dvfs).p_static
 
     # ------------------------------------------------------------------ #
     #  Measured (noisy) execution — what the scheduler observes

@@ -25,7 +25,8 @@ from .dvfs import DeviceClass, DVFSConfig
 from .simulator import AppProfile, Testbed
 
 __all__ = ["Job", "make_workload", "stream_workload", "drifting_workload",
-           "drift_profile", "make_device_pool", "heterogeneous_workload"]
+           "drift_profile", "make_device_pool", "heterogeneous_workload",
+           "cap_stress_workload"]
 
 
 @dataclasses.dataclass
@@ -172,6 +173,69 @@ def heterogeneous_workload(
         slack = float(rng.uniform(*slack_range)) * t_cls
         yield Job(app=apps[idx], arrival=now, deadline=done + slack,
                   job_id=jid)
+
+
+def cap_stress_workload(
+    apps: list[AppProfile],
+    testbed: Testbed,
+    pool: list[DeviceClass],
+    n_jobs: int = 240,
+    seed: int = 0,
+    burst: int | None = None,
+    mean_interburst: float | None = None,
+    slack_range: tuple[float, float] = (0.05, 0.4),
+    utilization: float = 0.85,
+):
+    """Bursty arrival stream sized to overrun a cluster power cap.
+
+    The power-budget stress case (:mod:`~repro.core.powercap`): arrivals
+    come in **bursts** of ``burst`` simultaneous jobs (default: one per
+    device), so right after each burst every device is busy at once and an
+    *uncapped* pool draws roughly the sum of per-device sprint power — the
+    aggregate spike a finite cap must reshape. Deadline slack is kept tight
+    (default 5–40% of the class default-clock time, vs. the Poisson
+    stream's 25–100%), so uncapped policies race clocks high and the
+    coordinator has real urgency differences to redistribute headroom
+    around.
+
+    Deadlines keep :func:`heterogeneous_workload`'s DC-anchoring guarantee
+    on the mixed pool (virtual default-clock schedule, earliest-free
+    virtual device, pool-position tie-break), so the pool-wide
+    default-clock baseline stays approximately schedulable at the
+    configured ``utilization`` — misses under a cap are the cap's doing,
+    not an infeasible workload. A generator, yielded in nondecreasing
+    arrival order like every stream here.
+    """
+    rng = np.random.default_rng(seed)
+    if burst is None:
+        burst = len(pool)
+    if burst < 1:
+        raise ValueError("burst must be >= 1")
+    t_dc: dict[str, np.ndarray] = {}
+    for cls in pool:
+        if cls.name not in t_dc:
+            t_dc[cls.name] = np.array([
+                testbed.true_time(a, cls.dvfs.default_clock, dvfs=cls.dvfs)
+                for a in apps])
+    if mean_interburst is None:
+        # aggregate DC throughput, as in heterogeneous_workload, but the
+        # load arrives `burst` jobs at a time
+        rate = sum(1.0 / float(t_dc[cls.name].mean()) for cls in pool)
+        mean_interburst = burst / (rate * utilization)
+    dev_free = np.zeros(len(pool))
+    now, jid = 0.0, 0
+    while jid < n_jobs:
+        now += float(rng.exponential(mean_interburst))
+        for _ in range(min(burst, n_jobs - jid)):
+            idx = int(rng.integers(len(apps)))
+            dev = int(np.argmin(dev_free))      # virtual DC dispatch
+            t_cls = float(t_dc[pool[dev].name][idx])
+            done = max(float(dev_free[dev]), now) + t_cls
+            dev_free[dev] = done
+            slack = float(rng.uniform(*slack_range)) * t_cls
+            yield Job(app=apps[idx], arrival=now, deadline=done + slack,
+                      job_id=jid)
+            jid += 1
 
 
 #: Default drift: a **bottleneck flip** — the app's compute shrinks while

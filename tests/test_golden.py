@@ -25,9 +25,9 @@ import numpy as np
 import pytest
 
 from repro.configs.paper_suite import PAPER_APPS
-from repro.core import (EnergyTimePredictor, PredictorConfig, Testbed,
-                        build_dataset, make_workload, profile_features,
-                        run_schedule)
+from repro.core import (EnergyTimePredictor, PowerCapCoordinator,
+                        PredictorConfig, Testbed, build_dataset,
+                        make_workload, profile_features, run_schedule)
 from repro.core.gbdt import GBDTParams
 from repro.core.policies import POLICY_NAMES
 
@@ -39,6 +39,17 @@ GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / \
 #: default budget managers. The predictor config is fixed here — goldens
 #: pin (predictor ∘ scheduler ∘ simulator) end to end.
 SEEDS = (0, 1)
+
+#: Capped canonical scenario (PR 4): the same seed-0 workload on two
+#: devices under a binding 120 W cluster cap (slack-weighted grants,
+#: guard 0.2) with the min-energy policy — pins the coordinator's
+#: offer/filter/escalate/defer path against silent drift exactly like the
+#: capless traces pin the engine. 120 W reshapes several records of the
+#: ~149 W-peak uncapped schedule while leaving 10/12 deadlines met.
+CAP_KEY = "min-energy|cap|0"
+CAP_W = 120.0
+CAP_DEVICES = 2
+CAP_GUARD = 0.2
 _GBDT = dict(iterations=80, depth=3, learning_rate=0.15)
 PREDICTOR_CONFIG = PredictorConfig(
     gbdt=GBDTParams(l2_leaf_reg=5.0, **_GBDT),
@@ -100,8 +111,21 @@ def compute_traces() -> dict:
             trace = trace_of(r.records)
             out[f"{policy}|{seed}"] = {"digest": digest_of(trace),
                                        "records": trace}
+    r = _capped_run()
+    trace = trace_of(r.records)
+    out[CAP_KEY] = {"digest": digest_of(trace), "records": trace}
     _CACHE["traces"] = out
     return out
+
+
+def _capped_run(cap_w: float = CAP_W):
+    f = _fixture()
+    jobs = make_workload(f["apps"], f["testbed"], seed=0)
+    return run_schedule(
+        jobs, "min-energy", Testbed(seed=100), predictor=f["predictor"],
+        app_features=f["features"], n_devices=CAP_DEVICES,
+        power_coordinator=PowerCapCoordinator(
+            cap_w, grant_policy="slack-weighted", guard=CAP_GUARD))
 
 
 def load_golden() -> dict:
@@ -130,11 +154,35 @@ def test_golden_trace(policy, seed):
     assert fresh["digest"] == golden["digest"]
 
 
+def test_capped_golden_trace():
+    """The power-capped canonical run == its checked-in trace — the
+    cap-path (offer / ladder filter / escalate / defer) drift gate."""
+    golden = load_golden()["traces"][CAP_KEY]
+    fresh = compute_traces()[CAP_KEY]
+    for i, (got, want) in enumerate(zip(fresh["records"],
+                                        golden["records"])):
+        assert got == want, (
+            f"{CAP_KEY} record {i} drifted "
+            f"(columns: {_COLUMNS}):\n got {got}\nwant {want}")
+    assert len(fresh["records"]) == len(golden["records"])
+    assert fresh["digest"] == golden["digest"]
+
+
+def test_capped_golden_is_binding():
+    """The 120 W cap must actually reshape the schedule — otherwise the
+    capped trace silently degenerates into a copy of the capless one and
+    the gate stops covering the cap path."""
+    import math
+    capless = trace_of(_capped_run(cap_w=math.inf).records)
+    assert digest_of(capless) != compute_traces()[CAP_KEY]["digest"]
+
+
 def test_golden_file_is_self_consistent():
     """Stored digests match the stored records (catches hand-edits)."""
     g = load_golden()
-    assert set(g["traces"]) == {f"{p}|{s}" for p in POLICY_NAMES
-                                for s in SEEDS}
+    expected = {f"{p}|{s}" for p in POLICY_NAMES for s in SEEDS}
+    expected.add(CAP_KEY)
+    assert set(g["traces"]) == expected
     for key, entry in g["traces"].items():
         assert digest_of(entry["records"]) == entry["digest"], key
         assert len(entry["records"]) == len(PAPER_APPS), key
