@@ -37,6 +37,9 @@ BENCHES = [
      "Beyond paper: heterogeneous device-class pool, joint placement"),
     ("powercap", "benchmarks.bench_powercap",
      "Beyond paper: cluster power cap — telemetry ledger + grant policies"),
+    ("preempt", "benchmarks.bench_preempt",
+     "Beyond paper: preemptive rescue — checkpoint/resume, mid-job "
+     "re-scaling; fewer misses at equal-or-lower energy"),
     ("kernels", "benchmarks.bench_kernels",
      "Kernel micro-benchmarks"),
     ("roofline", "benchmarks.bench_roofline",

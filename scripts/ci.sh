@@ -23,6 +23,12 @@ python -m benchmarks.bench_hetero --smoke
 echo "=== smoke: power-cap gate ==="
 python -m benchmarks.bench_powercap --smoke
 
+echo "=== smoke: preemptive-rescue gate ==="
+python -m benchmarks.bench_preempt --smoke
+
+echo "=== differential harness: preemptive-engine identity + conservation ==="
+python -m pytest -q tests/test_differential.py
+
 echo "=== golden traces: behavior-drift gate ==="
 python -m pytest -q tests/test_golden.py
 

@@ -31,7 +31,16 @@ def main() -> None:
                         f"min-energy, {test_golden.CAP_DEVICES} devices, "
                         f"{test_golden.CAP_W:.0f}W PowerCapCoordinator "
                         "(slack-weighted, guard "
-                        f"{test_golden.CAP_GUARD})",
+                        f"{test_golden.CAP_GUARD}); plus "
+                        f"{test_golden.PRE_FIRE_KEY!r}: "
+                        f"{test_golden.PRE_FIRE_JOBS}-job "
+                        "rescue_stress_workload(seed=0), min-energy, "
+                        "1 device, default PreemptionManager (rescues "
+                        f"fire) and {test_golden.PRE_DECLINE_KEY!r}: "
+                        "seed-0 workload with checkpoint_quantum="
+                        f"{test_golden.PRE_DECLINE_QUANTUM}, default "
+                        "PreemptionManager (every trigger declines — "
+                        "trace == 'min-energy|0')",
             "regen": "PYTHONPATH=src python scripts/regen_golden.py",
             "columns": list(test_golden._COLUMNS),
         },

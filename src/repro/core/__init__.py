@@ -14,7 +14,8 @@ from .predictor import (EnergyTimePredictor, PredictorConfig, loocv_rmse,
 from .correlate import CorrelationIndex
 from .workload import (Job, cap_stress_workload, drift_profile,
                        drifting_workload, heterogeneous_workload,
-                       make_device_pool, make_workload, stream_workload)
+                       make_device_pool, make_workload,
+                       rescue_stress_workload, stream_workload)
 from .prediction_service import ClockTable, PredictionService, ServiceStats
 from .policies import (BudgetManager, DeviceCandidate, Policy,
                        QueueAwareBudget, RiskAware, VirtualPacingBudget,
@@ -26,6 +27,8 @@ from .online import (DriftConfig, DriftDetector, GBDTCorrector, Observation,
                      ObservationStore, OnlineAdapter, RLSCorrector)
 from .powercap import (GRANT_POLICIES, CoordinatorStats, PowerCapCoordinator,
                        PowerSegment, PowerTelemetry)
+from .preemption import (PreemptionConfig, PreemptionManager,
+                         PreemptionStats)
 
 __all__ = [
     "ClockPair", "DVFSConfig", "V5E_DVFS",
@@ -47,4 +50,6 @@ __all__ = [
     "DriftConfig", "DriftDetector", "OnlineAdapter",
     "GRANT_POLICIES", "CoordinatorStats", "PowerCapCoordinator",
     "PowerSegment", "PowerTelemetry",
+    "PreemptionConfig", "PreemptionManager", "PreemptionStats",
+    "rescue_stress_workload",
 ]

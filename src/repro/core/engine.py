@@ -59,6 +59,16 @@ Invariants:
   capless engine (tests/test_powercap.py, bench_powercap). A finite cap
   turns each dispatch into offer → filtered selection → (escalate →)
   dispatch-or-defer → commit; see :mod:`repro.core.powercap`.
+* **Preemption identity & conservation.** With ``preemption=None`` (the
+  default) the plain loop runs untouched; with a
+  :class:`~repro.core.preemption.PreemptionManager` whose triggers never
+  fire, the segmented loop takes every decision at the same simulated
+  time over the same queue with the same RNG stream — records are
+  bit-identical (tests/test_differential.py, the ``preempt-decline``
+  golden trace). When rescues do fire, one record per *segment* is
+  emitted in dispatch order, Σ ``work_frac`` per job is exactly 1, and
+  each record's energy decomposes into duration × draw + explicit
+  checkpoint/restore joules; see :mod:`repro.core.preemption`.
 """
 from __future__ import annotations
 
@@ -114,6 +124,25 @@ class ExecutionRecord:
                                                     compare=False)
     power_peak_w: float | None = dataclasses.field(default=None,
                                                    compare=False)
+    #: Preemption provenance (PR 5) — on the non-preemptive path these
+    #: keep their defaults, and compare=False keeps a preemptive-but-
+    #: never-preempted run ``==``-identical to the plain engine (the
+    #: differential harness's contract). One record is one *segment*:
+    #: ``work_frac`` is the fraction of the job's work this segment
+    #: actually covered (Σ over a job's records is exactly 1),
+    #: ``segment`` counts resumes (0 = first dispatch), ``preempted``
+    #: marks a truncated segment (its ``preempt_reason`` says which
+    #: rescue fired), and ``overhead_s``/``overhead_j`` are the
+    #: checkpoint/restore seconds (inside ``time_s``, billed at the
+    #: measured draw) and extra joules (inside ``energy_j``) this
+    #: segment paid.
+    work_frac: float = dataclasses.field(default=1.0, compare=False)
+    segment: int = dataclasses.field(default=0, compare=False)
+    preempted: bool = dataclasses.field(default=False, compare=False)
+    preempt_reason: str | None = dataclasses.field(default=None,
+                                                   compare=False)
+    overhead_s: float = dataclasses.field(default=0.0, compare=False)
+    overhead_j: float = dataclasses.field(default=0.0, compare=False)
 
 
 @dataclasses.dataclass
@@ -127,7 +156,20 @@ class ScheduleResult:
 
     @property
     def misses(self) -> int:
-        return sum(not r.met_deadline for r in self.records)
+        """Deadline misses, counted per *job*: a preempted (truncated)
+        segment carries no verdict — only the job's final segment does.
+        Non-preemptive runs have no truncated records, so this is the
+        pre-PR count unchanged."""
+        return sum(not r.met_deadline for r in self.records
+                   if not r.preempted)
+
+    @property
+    def preemptions(self) -> int:
+        return sum(r.preempted for r in self.records)
+
+    def final_records(self) -> list[ExecutionRecord]:
+        """One record per job: the segment that ran to completion."""
+        return [r for r in self.records if not r.preempted]
 
     @property
     def makespan(self) -> float:
@@ -183,6 +225,32 @@ class _ArrivalStream:
         return job
 
 
+@dataclasses.dataclass
+class _RunningSeg:
+    """Preemptive-loop bookkeeping for one in-flight segment: everything
+    a boundary decision needs to price the remaining work, plus the
+    in-progress record the engine truncates if a rescue fires."""
+
+    job: Job
+    record: ExecutionRecord
+    dev: int
+    device_class: Optional[DeviceClass]
+    class_key: Optional[str]
+    clock: ClockPair
+    exec_start: float          # start + restore overhead: work begins here
+    end: float                 # planned completion (truncated on preempt)
+    full_time_s: float         # drawn whole-job time at this clock/class
+    quantum: Optional[float]
+    grant: Optional[float]
+    fb_seq: int = -1
+    done: bool = False         # finalized (hooks fired, feedback queued)
+
+    def remaining_at(self, t: float) -> float:
+        """Unfinished fraction of the *whole job* at time ``t``."""
+        prog = max(t - self.exec_start, 0.0) / self.full_time_s
+        return max(self.job.work_frac - prog, 0.0)
+
+
 class EventEngine:
     """Composable event-driven scheduler.
 
@@ -207,6 +275,7 @@ class EventEngine:
         feedback: Optional[object] = None,
         device_classes: Optional[Sequence[DeviceClass]] = None,
         power_coordinator: Optional[object] = None,
+        preemption: Optional[object] = None,
     ):
         self.testbed = testbed
         self.policy = resolve_policy(policy, testbed.dvfs)
@@ -236,6 +305,12 @@ class EventEngine:
         #: before every dispatch for a per-device power grant that filters
         #: the clock ladder. None (default) is the capless path, untouched.
         self.power_coordinator = power_coordinator
+        #: Optional :class:`~repro.core.preemption.PreemptionManager`
+        #: (PR 5): jobs with a ``checkpoint_quantum`` run as segments, the
+        #: manager is consulted at every boundary, and a preempted job's
+        #: remaining work re-enters the EDF queue as a resumable remnant.
+        #: None (default) runs the untouched non-preemptive loop.
+        self.preemption = preemption
         self.device_clocks: dict[int, Optional[ClockPair]] = {}
         if self.policy.table_kind != "none" and service is None:
             raise ValueError(
@@ -270,6 +345,22 @@ class EventEngine:
             return [c.idle_power() for c in self.device_classes]
         return [self.testbed.idle_power()] * self.n_devices
 
+    def _t_min_est(self, job: Job,
+                   device_class: Optional[DeviceClass] = None
+                   ) -> Optional[float]:
+        """Whole-job sprint-time estimate, same source hierarchy the
+        budget managers use: ground truth for truth-table policies, the
+        predictor when fitted, else None. The preemption manager scales
+        it to remnant work itself (:meth:`PreemptionManager.scale_t`)."""
+        svc = self.service
+        if svc is None:
+            return None
+        if self.policy.table_kind == "truth" and svc.testbed is not None:
+            return svc.true_t_min(job.app, device_class)
+        if svc.has_predictor:
+            return svc.t_min(job.name, device_class)
+        return None
+
     def _coord_t_min_fn(self):
         """``(job, device_class) -> s`` sprint-time estimate for the
         coordinator's slack weights — the same source hierarchy the
@@ -277,15 +368,21 @@ class EventEngine:
         predictor when fitted, else None (the coordinator then weights by
         raw deadline slack). ``device_class`` is the dispatching device's
         class (None for unplaced queue jobs), so on a mixed pool urgency
-        is judged against the right ladder."""
+        is judged against the right ladder. On the preemptive engine the
+        estimate is remnant-scaled, so a half-done job's urgency reflects
+        its remaining work. The source hierarchy itself lives in
+        :meth:`_t_min_est` — one definition for the coordinator's slack
+        weights and the preemption manager's queue-rescue trigger."""
         svc = self.service
-        if svc is None:
+        if svc is None or not (
+                (self.policy.table_kind == "truth"
+                 and svc.testbed is not None) or svc.has_predictor):
             return None
-        if self.policy.table_kind == "truth" and svc.testbed is not None:
-            return lambda j, cls=None: svc.true_t_min(j.app, cls)
-        if svc.has_predictor:
-            return lambda j, cls=None: svc.t_min(j.name, cls)
-        return None
+        base = lambda j, cls=None: self._t_min_est(j, cls)  # noqa: E731
+        if self.preemption is None:
+            return base
+        pre = self.preemption
+        return lambda j, cls=None: pre.scale_t(j, base(j, cls))
 
     def _planned_power(self, sel, clock: ClockPair, table,
                        dvfs) -> float:
@@ -301,8 +398,146 @@ class EventEngine:
                 pass
         return self.policy.model_power(clock, dvfs)
 
+    # -- decision core (shared by the plain and preemptive loops) ------- #
+    def _view(self, tab, job: Job):
+        """The table a decision looks through: raw for whole jobs, the
+        preemption manager's remnant lens (remaining-work scaling +
+        restore overhead) for resumable remnants. Identity on the
+        non-preemptive path — the object passes through untouched."""
+        if self.preemption is None:
+            return tab
+        return self.preemption.remnant_view(tab, job)
+
+    def _decide(self, job: Job, budget: float, start: float, dev: int,
+                orig_free_t: float, free, queue, coord,
+                running=None, finalize=None):
+        """The joint (device class, clock) decision + cap escalation —
+        extracted verbatim from the event loop so the preemptive loop
+        reuses it decision-for-decision. May reshuffle ``free`` (losing
+        co-free candidates are pushed back untouched). On the preemptive
+        loop ``running``/``finalize`` let the candidate gather treat a
+        device whose in-flight segment *ends by* ``start`` as co-free
+        (finalizing it), exactly as the plain loop's end-timed heap
+        entries do, while genuinely busy devices are held back.
+
+        Returns ``(dev, chosen_class, tab, run_dvfs, sel, grant)``."""
+        grant = None
+        if not self._multi_class:
+            chosen_class = (self.device_classes[dev]
+                            if self.device_classes is not None else None)
+            tab = self._view(self._table_for(job, chosen_class), job)
+            cdvfs = None if chosen_class is None else chosen_class.dvfs
+            if coord is None:
+                sel = self.policy.select_for_class(job, budget, tab,
+                                                   dvfs=cdvfs)
+                needed = None
+            else:
+                grant = coord.offer(dev, job, start, queue)
+                sel, needed = self.policy.select_capped(
+                    job, budget, tab, dvfs=cdvfs, grant=grant,
+                    guard=coord.guard)
+        else:
+            # every device free by `start` could start this job at
+            # `start` with the same budget; pop them (ascending
+            # (free_time, index) — on the preemptive loop a busy device's
+            # entry may be a segment *boundary*, so candidates are
+            # re-keyed by their true end and sorted to reproduce the
+            # plain heap order) and offer the policy one candidate per
+            # distinct class, earliest-free first, pushing the losers
+            # back untouched
+            others: list[tuple[float, int]] = []
+            held: list[tuple[float, int]] = []
+            while free and free[0][0] <= start:
+                t2, dv = heapq.heappop(free)
+                seg2 = running.get(dv) if running is not None else None
+                if seg2 is not None:
+                    if not seg2.done and seg2.end > start + 1e-12:
+                        held.append((t2, dv))     # genuinely busy
+                        continue
+                    finalize(seg2)                # complete by `start`
+                    del running[dv]
+                    t2 = seg2.end
+                others.append((t2, dv))
+            for ent in held:
+                heapq.heappush(free, ent)
+            others.sort()
+            entries = [(orig_free_t, dev)] + others
+            reps: list[tuple[float, int]] = []
+            cands: list[DeviceCandidate] = []
+            seen: set[str] = set()
+            for ent in entries:
+                cls = self.device_classes[ent[1]]
+                if cls.name in seen:
+                    continue
+                seen.add(cls.name)
+                reps.append(ent)
+                tab_c = self._view(self._table_for(job, cls), job)
+                if coord is None:
+                    cands.append(DeviceCandidate(cls, budget, tab_c))
+                else:
+                    cands.append(DeviceCandidate(
+                        cls, budget, tab_c,
+                        power_cap=coord.offer(ent[1], job, start, queue),
+                        guard=coord.guard))
+            ci, sel = self.policy.select_device_clock(job, cands)
+            chosen = reps[ci]
+            for ent in entries:
+                if ent != chosen:
+                    heapq.heappush(free, ent)
+            dev = chosen[1]
+            chosen_class = self.device_classes[dev]
+            tab = cands[ci].table
+            cdvfs = chosen_class.dvfs
+            needed = None
+            if coord is not None:
+                # recover the escalation target for the chosen class
+                # (select_device_clock discards it) — unconditionally:
+                # table-free policies report a rescue need alongside a
+                # *feasible* least-overdraw fallback, exactly like the
+                # single-class path
+                grant = cands[ci].power_cap
+                sel, needed = self.policy.select_capped(
+                    job, budget, tab, dvfs=cdvfs, grant=grant,
+                    guard=coord.guard)
+
+        if (coord is not None and needed is not None
+                and needed > grant):
+            # deadline rescue: reclaim granted-but-unused headroom
+            # and retry with whatever the coordinator can free up
+            raised = coord.escalate(dev, needed, start)
+            if raised > grant:
+                grant = raised
+                sel, _ = self.policy.select_capped(
+                    job, budget, tab, dvfs=cdvfs, grant=grant,
+                    guard=coord.guard)
+        return dev, chosen_class, tab, cdvfs, sel, grant
+
+    def _choose_clock(self, sel, tab, run_dvfs, coord, grant):
+        """Resolve the final clock (sprint fallback when no clock is
+        deadline-feasible — cap-aware under a coordinator) and the
+        planned commit watts (None without a coordinator)."""
+        d = self.testbed.dvfs
+        clock = sel.clock
+        if clock is None:
+            # sprint at the chosen class's max clock (see scheduler
+            # docstring — the engine never drops work); under a cap,
+            # sprint as fast as the grant allows instead
+            if coord is None:
+                clock = (d if run_dvfs is None else run_dvfs).max_clock
+            else:
+                clock = self.policy.sprint_clock(
+                    tab, dvfs=run_dvfs, grant=grant, guard=coord.guard)
+        plan_w = None
+        if coord is not None:
+            plan_w = self._planned_power(
+                sel, clock, tab, d if run_dvfs is None else run_dvfs)
+        return clock, plan_w
+
     def run(self, jobs: Iterable[Job]) -> ScheduleResult:
-        """Execute the stream to completion; returns per-job records."""
+        """Execute the stream to completion; returns per-job records (one
+        per *segment* on the preemptive path)."""
+        if self.preemption is not None:
+            return self._run_preemptive(jobs)
         stream = _ArrivalStream(jobs)
         rng = np.random.default_rng(self.seed)
         for bm in self.budget_managers:
@@ -322,7 +557,6 @@ class EventEngine:
         queue: list[tuple[float, int, Job]] = []   # (deadline, tiebreak, job)
         counter = 0
         records: list[ExecutionRecord] = []
-        d = self.testbed.dvfs
         # completions whose simulated end time has not been reached yet —
         # feedback must not see a measurement before it exists in simulated
         # time (on one device that is always the case; with many devices a
@@ -373,95 +607,12 @@ class EventEngine:
                 # release grants of jobs that ended by this decision —
                 # their devices revert to the idle floor
                 coord.advance(start)
-            grant = None
 
-            # ---- joint (device, clock) decision ----------------------- #
-            if not self._multi_class:
-                chosen_class = (self.device_classes[dev]
-                                if self.device_classes is not None else None)
-                tab = self._table_for(job, chosen_class)
-                cdvfs = None if chosen_class is None else chosen_class.dvfs
-                if coord is None:
-                    sel = self.policy.select_for_class(job, budget, tab,
-                                                       dvfs=cdvfs)
-                else:
-                    grant = coord.offer(dev, job, start, queue)
-                    sel, needed = self.policy.select_capped(
-                        job, budget, tab, dvfs=cdvfs, grant=grant,
-                        guard=coord.guard)
-            else:
-                # every device free by `start` could start this job at
-                # `start` with the same budget; pop them (heap yields
-                # ascending (free_time, index) — deterministic) and offer
-                # the policy one candidate per distinct class,
-                # earliest-free first, pushing the losers back untouched
-                entries = [(orig_free_t, dev)]
-                while free and free[0][0] <= start:
-                    entries.append(heapq.heappop(free))
-                reps: list[tuple[float, int]] = []
-                cands: list[DeviceCandidate] = []
-                seen: set[str] = set()
-                for ent in entries:
-                    cls = self.device_classes[ent[1]]
-                    if cls.name in seen:
-                        continue
-                    seen.add(cls.name)
-                    reps.append(ent)
-                    if coord is None:
-                        cands.append(DeviceCandidate(
-                            cls, budget, self._table_for(job, cls)))
-                    else:
-                        cands.append(DeviceCandidate(
-                            cls, budget, self._table_for(job, cls),
-                            power_cap=coord.offer(ent[1], job, start, queue),
-                            guard=coord.guard))
-                ci, sel = self.policy.select_device_clock(job, cands)
-                chosen = reps[ci]
-                for ent in entries:
-                    if ent != chosen:
-                        heapq.heappush(free, ent)
-                free_t, dev = chosen     # start is unchanged: free_t<=start
-                chosen_class = self.device_classes[dev]
-                tab = cands[ci].table
-                cdvfs = chosen_class.dvfs
-                needed = None
-                if coord is not None:
-                    # recover the escalation target for the chosen class
-                    # (select_device_clock discards it) — unconditionally:
-                    # table-free policies report a rescue need alongside a
-                    # *feasible* least-overdraw fallback, exactly like the
-                    # single-class path
-                    grant = cands[ci].power_cap
-                    sel, needed = self.policy.select_capped(
-                        job, budget, tab, dvfs=cdvfs, grant=grant,
-                        guard=coord.guard)
-
-            if (coord is not None and needed is not None
-                    and needed > grant):
-                # deadline rescue: reclaim granted-but-unused headroom
-                # and retry with whatever the coordinator can free up
-                raised = coord.escalate(dev, needed, start)
-                if raised > grant:
-                    grant = raised
-                    sel, _ = self.policy.select_capped(
-                        job, budget, tab, dvfs=cdvfs, grant=grant,
-                        guard=coord.guard)
-
-            run_dvfs = None if chosen_class is None else chosen_class.dvfs
-            clock = sel.clock
-            if clock is None:
-                # sprint at the chosen class's max clock (see scheduler
-                # docstring — the engine never drops work); under a cap,
-                # sprint as fast as the grant allows instead
-                if coord is None:
-                    clock = (d if run_dvfs is None else run_dvfs).max_clock
-                else:
-                    clock = self.policy.sprint_clock(
-                        tab, dvfs=run_dvfs, grant=grant, guard=coord.guard)
-            plan_w = None
+            dev, chosen_class, tab, run_dvfs, sel, grant = self._decide(
+                job, budget, start, dev, orig_free_t, free, queue, coord)
+            clock, plan_w = self._choose_clock(sel, tab, run_dvfs, coord,
+                                               grant)
             if coord is not None:
-                plan_w = self._planned_power(
-                    sel, clock, tab, d if run_dvfs is None else run_dvfs)
                 if plan_w * (1 + coord.guard) > grant + 1e-9:
                     # power deferral: not even this clock fits the
                     # cluster's remaining headroom (post-escalation). If a
@@ -515,5 +666,257 @@ class EventEngine:
             heapq.heappush(free, (end, dev))
 
         while fb_pending:                  # stream drained: flush the rest
+            self.feedback.observe(heapq.heappop(fb_pending)[2])
+        return ScheduleResult(policy=self.policy.name, records=records)
+
+    # ------------------------------------------------------------------ #
+    #  Preemptive (segmented) event loop — PR 5
+    # ------------------------------------------------------------------ #
+    def _run_preemptive(self, jobs: Iterable[Job]) -> ScheduleResult:
+        """The segmented dispatch loop: a mirror of :meth:`run` in which a
+        dispatched job with a ``checkpoint_quantum`` stays *in flight* —
+        its device re-enters the event heap at every quantum boundary,
+        where the :class:`~repro.core.preemption.PreemptionManager` may
+        truncate the segment and re-enqueue the remaining work as a
+        resumable remnant. Every decision a boundary never interrupts is
+        taken at the same simulated time, over the same queue, with the
+        same RNG stream as the plain loop — a run in which every boundary
+        declines is bit-identical to :meth:`run` (the differential
+        harness's contract; see tests/test_differential.py).
+
+        Known approximation, inherited from the plain loop's empty-queue
+        bump: a free device may jump its decision time to the next
+        arrival and dispatch *before* an earlier-timed boundary event of
+        a busy device is popped. That boundary is then evaluated late —
+        its verdict can see corrected tables already updated with
+        measurements that end after ``t_b``. This never affects identity
+        (declines are stateless) or conservation; the queue-rescue
+        trigger additionally filters to jobs arrived by ``t_b``, so a
+        late boundary can never preempt for work from the future."""
+        pre = self.preemption
+        cfg = pre.config
+        stream = _ArrivalStream(jobs)
+        rng = np.random.default_rng(self.seed)
+        for bm in self.budget_managers:
+            bm.reset()
+        coord = self.power_coordinator
+        if coord is not None:
+            coord.reset(self._idle_powers(), t_min_fn=self._coord_t_min_fn(),
+                        device_classes=self.device_classes)
+        pre.reset()
+        self.device_clocks = {dev: None for dev in range(self.n_devices)}
+
+        free = [(0.0, dev) for dev in range(self.n_devices)]
+        heapq.heapify(free)
+        queue: list[tuple[float, int, Job]] = []
+        counter = 0
+        records: list[ExecutionRecord] = []
+        fb_pending: list[tuple[float, int, ExecutionRecord]] = []
+        fb_seq = 0
+        running: dict[int, _RunningSeg] = {}
+        # devices idled after the stream drained: they re-enter the heap
+        # the moment a preemption re-fills the queue with a remnant
+        parked: list[int] = []
+
+        def admit(upto: float) -> None:
+            nonlocal counter
+            while not stream.exhausted and stream.peek_arrival() <= upto:
+                j = stream.pop()
+                heapq.heappush(queue, (j.deadline, counter, j))
+                counter += 1
+                for bm in self.budget_managers:
+                    bm.on_admit(j)
+                if self.hooks.on_admit:
+                    self.hooks.on_admit(j, upto)
+
+        def finalize(seg: _RunningSeg) -> None:
+            if seg.done:
+                return
+            seg.done = True
+            if self.hooks.on_complete:
+                self.hooks.on_complete(seg.record)
+            if self.feedback is not None:
+                heapq.heappush(fb_pending,
+                               (seg.end, seg.fb_seq, seg.record))
+
+        def drain_fb(t: float) -> None:
+            # a segment whose planned end has passed is complete even if
+            # its heap event has not popped yet (a bumped decision can
+            # jump past it) — finalize so its measurement is deliverable
+            # exactly when the plain loop would deliver it
+            if self.feedback is None:
+                return
+            for seg in running.values():
+                if not seg.done and seg.end <= t + 1e-12:
+                    finalize(seg)
+            while fb_pending and fb_pending[0][0] <= t + 1e-12:
+                self.feedback.observe(heapq.heappop(fb_pending)[2])
+
+        while not stream.exhausted or queue or running:
+            free_t, dev = heapq.heappop(free)
+            seg = running.get(dev)
+            if seg is not None:
+                if free_t < seg.end - 1e-12 and not seg.done:
+                    # ---- segment boundary: preempt or continue -------- #
+                    t_b = free_t
+                    admit(t_b)
+                    drain_fb(t_b)
+                    if coord is not None:
+                        coord.advance(t_b)
+                    reason = pre.decide(self, seg, t_b, queue, running)
+                    if reason is None:
+                        heapq.heappush(
+                            free, (min(t_b + seg.quantum, seg.end), dev))
+                        continue
+                    # truncate the in-flight segment at the boundary and
+                    # bill the checkpoint; the remnant re-enters the EDF
+                    # queue and the device frees after the checkpoint
+                    rec = seg.record
+                    rem = seg.remaining_at(t_b)
+                    rec.end = t_b + cfg.checkpoint_s
+                    rec.time_s = rec.end - rec.start
+                    rec.overhead_s += cfg.checkpoint_s
+                    rec.overhead_j += cfg.checkpoint_j
+                    rec.energy_j = (rec.time_s * rec.power_w
+                                    + rec.overhead_j)
+                    rec.work_frac = seg.job.work_frac - rem
+                    rec.preempted = True
+                    rec.preempt_reason = reason
+                    rec.met_deadline = rec.end <= rec.deadline + 1e-9
+                    seg.end = rec.end
+                    pre.stats.preemptions += 1
+                    pre.stats.overhead_s += cfg.checkpoint_s
+                    pre.stats.overhead_j += cfg.checkpoint_j
+                    if coord is not None:
+                        # the grant's lease shrinks to the checkpoint —
+                        # the watts release at the boundary, not at the
+                        # originally committed end
+                        coord.truncate(dev, rec.end)
+                    remnant = dataclasses.replace(
+                        seg.job, work_frac=rem,
+                        segment=seg.job.segment + 1)
+                    pre.note_preempt(remnant, seg)
+                    heapq.heappush(queue,
+                                   (remnant.deadline, counter, remnant))
+                    counter += 1
+                    for bm in self.budget_managers:
+                        bm.on_admit(remnant)
+                    while parked:             # remnant work exists again
+                        heapq.heappush(free, (t_b, parked.pop()))
+                    finalize(seg)
+                    del running[dev]
+                    # rejoin the event heap at the checkpoint's end
+                    # instead of dispatching in place: another device's
+                    # event inside the checkpoint window must be
+                    # processed first, or a tighter-deadline job could
+                    # start late on the wrong device
+                    heapq.heappush(free, (rec.end, dev))
+                    continue
+                else:
+                    # ---- completion (or a stale boundary of a segment
+                    # already finalized by an early drain) -------------- #
+                    if free_t < seg.end - 1e-12:
+                        heapq.heappush(free, (seg.end, dev))
+                        continue
+                    finalize(seg)
+                    del running[dev]
+                    free_t = seg.end
+
+            # ---- dispatch path (mirrors the plain loop) --------------- #
+            orig_free_t = free_t
+            if not queue:
+                if stream.exhausted:
+                    if running:
+                        parked.append(dev)
+                        continue
+                    break
+                free_t = max(free_t, stream.peek_arrival())
+            admit(free_t)
+            if not queue:
+                heapq.heappush(free, (free_t, dev))
+                continue
+
+            bm_snaps = None
+            if coord is not None and self.budget_managers:
+                bm_snaps = [bm.snapshot() for bm in self.budget_managers]
+            dl_key, cnt_key, job = heapq.heappop(queue)   # EDF
+            for bm in self.budget_managers:
+                bm.on_pop(job)
+            start = max(free_t, job.arrival)
+            drain_fb(start)
+            budget = job.deadline - start
+            for bm in self.budget_managers:
+                budget = bm.apply(job, start, budget)
+            if coord is not None:
+                coord.advance(start)
+
+            dev, chosen_class, tab, run_dvfs, sel, grant = self._decide(
+                job, budget, start, dev, orig_free_t, free, queue, coord,
+                running=running, finalize=finalize)
+            clock, plan_w = self._choose_clock(sel, tab, run_dvfs, coord,
+                                               grant)
+            if coord is not None:
+                if plan_w * (1 + coord.guard) > grant + 1e-9:
+                    # power deferral, exactly as in the plain loop
+                    wait_t = coord.next_release(start)
+                    if wait_t is not None:
+                        if bm_snaps is not None:
+                            for bm, snap in zip(self.budget_managers,
+                                                bm_snaps):
+                                bm.restore(snap)
+                        heapq.heappush(queue, (dl_key, cnt_key, job))
+                        heapq.heappush(free, (wait_t, dev))
+                        continue
+            if self.hooks.on_dispatch:
+                self.hooks.on_dispatch(job, dev, clock, start)
+            self.device_clocks[dev] = clock
+
+            meas = self.testbed.run(job.app, clock, rng=rng, dvfs=run_dvfs)
+            restore_s = cfg.restore_s if job.segment > 0 else 0.0
+            restore_j = cfg.restore_j if job.segment > 0 else 0.0
+            seg_time = job.work_frac * meas.time_s + restore_s
+            end = start + seg_time
+            rec = ExecutionRecord(
+                job_id=job.job_id, name=job.name, arrival=job.arrival,
+                deadline=job.deadline, start=start, end=end, device=dev,
+                clock=clock, time_s=seg_time, power_w=meas.power_w,
+                energy_j=seg_time * meas.power_w + restore_j,
+                predicted_time=sel.time, predicted_power=sel.power,
+                met_deadline=end <= job.deadline + 1e-9,
+                had_feasible_clock=sel.feasible,
+                device_class=(None if chosen_class is None
+                              else chosen_class.name),
+                power_peak_w=None if coord is None else meas.power_w,
+                work_frac=job.work_frac, segment=job.segment,
+                overhead_s=restore_s, overhead_j=restore_j,
+            )
+            if coord is not None:
+                coord.commit(
+                    dev, max(plan_w * (1 + coord.guard),
+                             coord.idle_of(dev)),
+                    end, meas.power_w, record=rec)
+            records.append(rec)            # dispatch order, like run()
+            if job.segment > 0:
+                pre.note_resume(job, rec)
+            seg = _RunningSeg(
+                job=job, record=rec, dev=dev, device_class=chosen_class,
+                class_key=(None if chosen_class is None
+                           else chosen_class.name),
+                clock=clock, exec_start=start + restore_s, end=end,
+                full_time_s=meas.time_s, quantum=pre.quantum_of(job),
+                grant=grant)
+            if self.feedback is not None:
+                seg.fb_seq = fb_seq
+                fb_seq += 1
+            running[dev] = seg
+            first_evt = end
+            if (seg.quantum is not None
+                    and seg.exec_start + seg.quantum < end - 1e-9):
+                first_evt = seg.exec_start + seg.quantum
+            heapq.heappush(free, (first_evt, dev))
+
+        for seg in running.values():       # drain in-flight completions
+            finalize(seg)
+        while fb_pending:
             self.feedback.observe(heapq.heappop(fb_pending)[2])
         return ScheduleResult(policy=self.policy.name, records=records)

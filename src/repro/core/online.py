@@ -487,6 +487,16 @@ class OnlineAdapter:
         i = idx_map.get(rec.clock)
         if i is None:       # clock outside the class's ladder: can't label
             return None
+        # per-segment normalization (PR 5): a preempted/resumed segment
+        # covers only ``work_frac`` of the job and its measured time may
+        # include checkpoint/restore seconds — the residual compares the
+        # pure execution seconds against the base prediction *for that
+        # fraction of work*, so every segment is a full-weight rate
+        # sample and a whole job (work_frac=1, overhead 0) reduces to the
+        # pre-preemption residual bit-for-bit
+        exec_s = rec.time_s - rec.overhead_s
+        if rec.work_frac <= 1e-9 or exec_s <= 0:
+            return None        # checkpoint-only sliver: no rate signal
         base = self.service.base_table(rec.name, dc)
         # corrections, statistics, and drift detection are all filed per
         # (app, device class) — a drift on one class never resets another
@@ -495,7 +505,8 @@ class OnlineAdapter:
         obs = Observation(
             name=key, clock=rec.clock, time_s=rec.time_s,
             power_w=rec.power_w,
-            r_time=math.log(max(rec.time_s, 1e-12) / max(base.T[i], 1e-12)),
+            r_time=math.log(max(exec_s, 1e-12)
+                            / max(rec.work_frac * base.T[i], 1e-12)),
             r_power=math.log(max(rec.power_w, 1e-12) / max(base.P[i], 1e-12)),
         )
         self.n_observed += 1

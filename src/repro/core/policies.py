@@ -281,6 +281,37 @@ class Policy:
         best = self._fastest_fitting(d, grant, guard)
         return best if best is not None else self._cheapest_clock(d)
 
+    # -- preemptive rescue (PR 5) -------------------------------------- #
+    def rescue_trigger(self, now: float, deadline: float,
+                       remaining_pred_s: float,
+                       margin: float = 0.0) -> bool:
+        """The rescue predicate: is the committed plan predicted to miss?
+
+        True when ``now + remaining x (1 + margin)`` overshoots the
+        deadline — the signal the :class:`~repro.core.preemption.
+        PreemptionManager` evaluates at every segment boundary, fed with
+        the *corrected* (or truth) table's remaining-time estimate, and
+        the same test that decides whether a queued job is stranded
+        behind the running ones. ``margin`` absorbs prediction noise so a
+        healthy schedule declines instead of thrashing."""
+        return now + remaining_pred_s * (1.0 + margin) > deadline + 1e-9
+
+    def select_resume(self, job: Job, budget: float,
+                      table: Optional[ClockTable], work_frac: float,
+                      overhead_s: float = 0.0,
+                      dvfs: Optional[DVFSConfig] = None) -> ClockSelection:
+        """Clock choice for a resumable remnant: the normal per-class
+        selection, run on :meth:`ClockTable.remnant` — the same lens the
+        engine threads through the joint placement decision and the cap
+        filter (:meth:`~repro.core.preemption.PreemptionManager.
+        remnant_view` delegates to the very same method), so a resume
+        re-scores (class, clock) on what is actually left — mid-job
+        re-scaling and cross-class migration fall out for free.
+        Table-free policies resume at their fixed clock."""
+        if table is not None:
+            table = table.remnant(work_frac, overhead_s)
+        return self.select_for_class(job, budget, table, dvfs=dvfs)
+
     def class_score(self, job: Job, cand: DeviceCandidate,
                     sel: ClockSelection) -> tuple:
         """Totally-ordered score for one candidate (lower is better).

@@ -538,6 +538,42 @@ class PowerCapCoordinator:
                         idle_d + head)
         return max(idle_d + head * share, uniform_w)
 
+    def potential_w(self, dev: int) -> float:
+        """Non-mutating upper bound on the grant a *preempt-and-retry* on
+        ``dev`` could obtain: idle floor + free headroom + every other
+        running grant's reclaimable slice (granted watts above
+        ``max(realized draw, idle)``) + ``dev``'s **own** running grant
+        above its idle floor — a preemption truncates that grant
+        (:meth:`truncate`), so the remnant's re-dispatch gets those watts
+        back before its offer/escalation even runs. The preemption
+        manager probes this at segment boundaries to ask "could a retry
+        with a bigger grant save this job?" without actually clawing
+        anything back — a declined rescue must leave the coordinator
+        untouched."""
+        if not math.isfinite(self.cap_w):
+            return math.inf
+        reclaimable = math.fsum(
+            max(g - max(drawn, self._idle[d2]), 0.0)
+            for d2, (g, _, drawn, _) in self._active.items() if d2 != dev)
+        own = (max(self._alloc[dev] - self._idle[dev], 0.0)
+               if dev in self._active else 0.0)
+        return self._idle[dev] + self.headroom_w + reclaimable + own
+
+    def truncate(self, dev: int, end: float) -> None:
+        """A preemption checkpointed ``dev``'s job early: shrink the
+        running grant's lease to ``end`` (the checkpoint completion) so
+        the watts release at the segment boundary — the next
+        :meth:`advance` past ``end`` returns the device to its idle floor
+        instead of holding the grant until the originally committed
+        completion. The grant's *size* (and the attached record) is left
+        alone: the device really did draw those watts until the
+        checkpoint finished. The resumed remnant commits a fresh grant at
+        re-dispatch — shrink here, regrow there."""
+        ent = self._active.get(dev)
+        if ent is not None:
+            g, _, drawn, rec = ent
+            self._active[dev] = (g, float(end), drawn, rec)
+
     def escalate(self, dev: int, needed_w: float, start: float) -> float:
         """Deadline rescue: the offered grant blocks a deadline-feasible
         clock needing ``needed_w`` total watts. Reclaim granted-but-unused

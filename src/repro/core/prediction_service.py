@@ -89,6 +89,20 @@ class ClockTable:
     def E(self) -> np.ndarray:
         return self.P * self.T
 
+    def remnant(self, work_frac: float,
+                overhead_s: float = 0.0) -> "ClockTable":
+        """The table re-expressed for a resumable remnant covering
+        ``work_frac`` of the job's work: ``T' = work_frac * T +
+        overhead_s``, power per clock unchanged (a remnant draws what
+        the app draws). The single definition of the remnant lens —
+        :meth:`~repro.core.preemption.PreemptionManager.remnant_view`
+        and :meth:`~repro.core.policies.Policy.select_resume` both
+        delegate here, so remnant pricing can never drift between the
+        engine's resume path and the policy API."""
+        return ClockTable(clocks=self.clocks, P=self.P,
+                          T=self.T * work_frac + overhead_s,
+                          source=self.source)
+
 
 @dataclasses.dataclass
 class ServiceStats:

@@ -116,6 +116,7 @@ def run_schedule(
     feedback: object | None = None,
     device_classes: "Sequence[DeviceClass] | None" = None,
     power_coordinator: object | None = None,
+    preemption: object | None = None,
 ) -> ScheduleResult:
     """Event-driven schedule execution on the simulated testbed.
 
@@ -148,6 +149,14 @@ def run_schedule(
     budget and the clock ladder is filtered to clocks fitting the grant.
     ``None`` (default) and cap=∞ both reproduce the capless engine
     bit-identically.
+
+    ``preemption``: a :class:`~repro.core.preemption.PreemptionManager` —
+    jobs with a ``checkpoint_quantum`` become interruptible at segment
+    boundaries, mispredicted runs are re-scaled mid-flight, and stranded
+    urgent jobs can preempt slack-rich ones (the remnant resumes, possibly
+    on another device class). ``None`` (default) runs the untouched
+    non-preemptive loop; a manager whose triggers never fire is
+    bit-identical to it (tests/test_differential.py).
     """
     if isinstance(policy, Policy):
         pol, policy = policy, policy.name
@@ -176,22 +185,32 @@ def run_schedule(
     dc0 = (device_classes[0]
            if device_classes is not None and n_devices == 1 else None)
 
+    # On the preemptive engine a queued entry may be a resumable remnant:
+    # its budget-manager estimates must price the *remaining* work (plus
+    # the restore overhead), which the manager's scale_t lens does. With
+    # preemption=None the wrap is skipped entirely (identity).
+    def _scaled(fn):
+        if preemption is None:
+            return fn
+        return lambda j: preemption.scale_t(j, fn(j))
+
     managers = []
     if queue_aware and n_devices == 1:
         # t_min source mirrors the legacy path: ground truth for the oracle,
         # the predictor when available, otherwise no cap
         if policy == "oracle":
             managers.append(QueueAwareBudget(
-                lambda j: service.true_t_min(j.app, dc0)))
+                _scaled(lambda j: service.true_t_min(j.app, dc0))))
         elif predictor is not None and app_features is not None:
             managers.append(QueueAwareBudget(
-                lambda j: service.t_min(j.name, dc0)))
+                _scaled(lambda j: service.t_min(j.name, dc0))))
     if virtual_pacing and policy not in ("dc", "mc") and n_devices == 1:
         if policy == "oracle" or app_features is None or predictor is None:
             t_dc = lambda j: service.true_t_dc(j.app, dc0)  # noqa: E731
         else:
             t_dc = lambda j: service.t_dc(j.name, dc0)      # noqa: E731
-        managers.append(VirtualPacingBudget(t_dc, slack_share=slack_share))
+        managers.append(VirtualPacingBudget(_scaled(t_dc),
+                                            slack_share=slack_share))
 
     engine = EventEngine(
         testbed,
@@ -204,6 +223,7 @@ def run_schedule(
         feedback=feedback,
         device_classes=device_classes,
         power_coordinator=power_coordinator,
+        preemption=preemption,
     )
     return engine.run(jobs)
 

@@ -26,7 +26,7 @@ from .simulator import AppProfile, Testbed
 
 __all__ = ["Job", "make_workload", "stream_workload", "drifting_workload",
            "drift_profile", "make_device_pool", "heterogeneous_workload",
-           "cap_stress_workload"]
+           "cap_stress_workload", "rescue_stress_workload"]
 
 
 @dataclasses.dataclass
@@ -35,6 +35,18 @@ class Job:
     arrival: float
     deadline: float            # absolute
     job_id: int = 0
+    #: Seconds between checkpoint opportunities when the engine runs with
+    #: a :class:`~repro.core.preemption.PreemptionManager`; None = the job
+    #: is uninterruptible (and on the non-preemptive engine the field is
+    #: inert either way).
+    checkpoint_quantum: "float | None" = None
+    #: Fraction of the job's work this (remnant) entry still covers, and
+    #: which resume this is. A fresh job is ``(1.0, 0)``; the preemption
+    #: machinery re-enqueues remnants via ``dataclasses.replace`` with the
+    #: unfinished fraction and an incremented segment. Σ dispatched
+    #: fractions per job is exactly 1 (conservation invariant).
+    work_frac: float = 1.0
+    segment: int = 0
 
     @property
     def name(self) -> str:
@@ -236,6 +248,92 @@ def cap_stress_workload(
             yield Job(app=apps[idx], arrival=now, deadline=done + slack,
                       job_id=jid)
             jid += 1
+
+
+def rescue_stress_workload(
+    apps: list[AppProfile],
+    testbed: Testbed,
+    n_jobs: int = 120,
+    seed: int = 0,
+    n_devices: int = 1,
+    burst: int = 4,
+    whale_slack: tuple[float, float] = (2.6, 3.4),
+    short_slack: tuple[float, float] = (0.15, 0.45),
+    gap_frac: float = 0.08,
+    drain_frac: float = 0.4,
+    quantum_frac: float = 0.12,
+    react_s: float | None = None,
+    dvfs: DVFSConfig | None = None,
+):
+    """Deadline-tight stream engineered to strand jobs behind long runs —
+    the preemptive-rescue stress case (:mod:`~repro.core.preemption`).
+
+    The non-preemptive EDF failure mode: a long **whale** job with a
+    *loose* deadline arrives into an idle pool and starts immediately (a
+    min-energy policy crawls it at a cheap clock — its own deadline
+    allows that); a **burst** of short, *tight*-deadline jobs arrives
+    just after, queues behind the whale, and misses — EDF cannot help,
+    because dispatch order is only decided when a device frees. A
+    preemptive engine checkpoints the whale at its next quantum boundary
+    (``checkpoint_quantum`` = ``quantum_frac`` x its default-clock time),
+    runs the shorts, and resumes the remnant — the whale's loose deadline
+    absorbs the detour.
+
+    Deadline anchoring: whales get ``arrival + U[whale_slack] x t_dc``
+    (generous — a resumed remnant plus overheads still fits); shorts are
+    anchored on a virtual default-clock schedule of the *burst alone*
+    over the full pool, as if the whale were preemptible — starting
+    ``react_s`` after the burst arrives (the preemptive scheduler's
+    reaction latency: one whale quantum plus a checkpoint; default
+    ``quantum_frac x t_dc(whale) + 0.15``) — plus ``U[short_slack] x
+    t_dc``. Every short is therefore feasible for a preemptive scheduler
+    by construction, while the whale's remaining crawl (an energy-greedy
+    policy stretches it far past ``react_s``) strands them on the
+    non-preemptive engine. Rounds are spaced past a worst-case
+    slow-clock whale plus the burst's serial span, so backlog never
+    leaks across rounds and each round's misses are the stranding's
+    doing. A generator in nondecreasing arrival order, like every
+    stream here."""
+    rng = np.random.default_rng(seed)
+    d = dvfs or testbed.dvfs
+    t_dc = np.array([testbed.true_time(a, d.default_clock, dvfs=dvfs)
+                     for a in apps])
+    order = np.argsort(t_dc)
+    whale_idx = [int(i) for i in order[-max(1, len(apps) // 4):]]
+    short_idx = [int(i) for i in order[:max(1, len(apps) // 2)]]
+    now, jid = 0.0, 0
+    while jid < n_jobs:
+        # whale into an idle pool
+        wi = whale_idx[int(rng.integers(len(whale_idx)))]
+        t_w = float(t_dc[wi])
+        slack_w = float(rng.uniform(*whale_slack))
+        yield Job(app=apps[wi], arrival=now, deadline=now + slack_w * t_w,
+                  job_id=jid, checkpoint_quantum=quantum_frac * t_w)
+        jid += 1
+        # burst of tight shorts shortly after the whale has started; their
+        # anchor concedes the preemptive reaction latency (whale quantum +
+        # checkpoint) before the pool is assumed free
+        t_burst = now + gap_frac * t_w
+        react = (quantum_frac * t_w + 0.15) if react_s is None else react_s
+        dev_free = np.full(n_devices, t_burst + react)
+        burst_end, serial_s = t_burst, 0.0
+        for _ in range(min(burst, n_jobs - jid)):
+            si = short_idx[int(rng.integers(len(short_idx)))]
+            t_s = float(t_dc[si])
+            dev = int(np.argmin(dev_free))     # virtual DC dispatch,
+            done = float(dev_free[dev]) + t_s  # whale assumed preemptible
+            dev_free[dev] = done
+            slack_s = float(rng.uniform(*short_slack))
+            yield Job(app=apps[si], arrival=t_burst,
+                      deadline=done + slack_s * t_s, job_id=jid,
+                      checkpoint_quantum=quantum_frac * t_s)
+            jid += 1
+            burst_end = max(burst_end, done)
+            serial_s += t_s
+        # next round only after even a slow-clock whale plus the whole
+        # burst has drained — stranding stays within the round
+        now = (max(now + 1.8 * t_w, burst_end) + serial_s
+               + drain_frac * t_w)
 
 
 #: Default drift: a **bottleneck flip** — the app's compute shrinks while

@@ -1,21 +1,35 @@
 """Minimal stand-in for ``hypothesis`` when it is not installed.
 
 The test suite uses a small, fixed subset of the hypothesis API:
-``@settings(max_examples=N, deadline=None)`` stacked on ``@given(**strategies)``
-with ``st.integers(lo, hi)`` / ``st.sampled_from(seq)`` strategies. This shim
-reproduces that subset with *deterministic* sampling (seeded numpy RNG), so
-property tests still exercise a spread of inputs on machines without the real
-library. Install ``hypothesis`` to get true shrinking/coverage; test modules
-import it preferentially:
+``@settings(max_examples=N, deadline=None)`` stacked (in either order) with
+``@given(**strategies)`` and the strategies ``st.integers(lo, hi)``,
+``st.sampled_from(seq)`` and ``st.floats(lo, hi)``. This shim reproduces
+that subset with *deterministic* sampling (seeded numpy RNG), so property
+tests still exercise a spread of inputs on machines without the real
+library — and the suite **collects identically** with and without
+hypothesis installed. Install ``hypothesis`` to get true
+shrinking/coverage; test modules import it preferentially::
 
     try:
         from hypothesis import given, settings, strategies as st
     except ImportError:
         from _hypothesis_fallback import given, settings, strategies as st
+
+Parity rules the differential suite relies on (tests/test_differential.py):
+
+* ``settings`` accepts — and ignores where semantics don't apply — the
+  standard kwargs the suite passes (``deadline``, ``max_examples``,
+  ``derandomize``, ``print_blob``, ``suppress_health_check``); unknown
+  kwargs raise, like the real library, so typos don't silently change the
+  example budget.
+* ``settings`` composes with ``given`` in **either** decorator order:
+  the example budget is honored whether the ``@settings`` line sits above
+  or below ``@given``.
+* strategies draw from inclusive integer ranges / half-open float ranges
+  with the same call signatures the real library accepts positionally.
 """
 from __future__ import annotations
 
-import functools
 import types
 
 import numpy as np
@@ -23,6 +37,15 @@ import numpy as np
 __all__ = ["given", "settings", "strategies"]
 
 _DEFAULT_EXAMPLES = 10
+
+#: Keyword arguments of the real ``hypothesis.settings`` that the shim
+#: accepts (only ``max_examples`` changes behavior here; the rest gate
+#: runtime policies a deterministic shim has no use for).
+_KNOWN_SETTINGS = frozenset({
+    "max_examples", "deadline", "derandomize", "print_blob", "phases",
+    "suppress_health_check", "database", "verbosity", "stateful_step_count",
+    "report_multiple_bugs",
+})
 
 
 class _Strategy:
@@ -42,11 +65,27 @@ def _sampled_from(seq) -> _Strategy:
     return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
 
 
-strategies = types.SimpleNamespace(integers=_integers, sampled_from=_sampled_from)
+def _floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
 
 
-def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
-    """Record the example budget on the decorated test (deadline etc. ignored)."""
+strategies = types.SimpleNamespace(
+    integers=_integers, sampled_from=_sampled_from, floats=_floats)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **kwargs):
+    """Record the example budget on the decorated test.
+
+    Works above or below ``@given``: the budget is stamped on whatever
+    callable it decorates (the raw test or given's wrapper), and
+    :func:`given` checks both. Unknown kwargs raise — matching the real
+    library's validation, so a typo cannot silently fall back to the
+    default budget."""
+    unknown = set(kwargs) - _KNOWN_SETTINGS
+    if unknown:
+        raise TypeError(
+            f"settings() got unexpected keyword argument(s) "
+            f"{sorted(unknown)}; known: {sorted(_KNOWN_SETTINGS)}")
 
     def deco(fn):
         fn._max_examples = max_examples

@@ -17,6 +17,7 @@ behavior change.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import json
 import pathlib
@@ -26,8 +27,9 @@ import pytest
 
 from repro.configs.paper_suite import PAPER_APPS
 from repro.core import (EnergyTimePredictor, PowerCapCoordinator,
-                        PredictorConfig, Testbed, build_dataset,
-                        make_workload, profile_features, run_schedule)
+                        PredictorConfig, PreemptionManager, Testbed,
+                        build_dataset, make_workload, profile_features,
+                        rescue_stress_workload, run_schedule)
 from repro.core.gbdt import GBDTParams
 from repro.core.policies import POLICY_NAMES
 
@@ -50,6 +52,24 @@ CAP_KEY = "min-energy|cap|0"
 CAP_W = 120.0
 CAP_DEVICES = 2
 CAP_GUARD = 0.2
+
+#: Preemptive canonical scenarios (PR 5), both min-energy with a
+#: default-config PreemptionManager:
+#:
+#: * **fires** — a 12-job rescue-stress stream on one device: whales are
+#:   checkpointed for stranded shorts and re-scaled mid-flight, so the
+#:   trace contains truncated + resumed segments (more records than
+#:   jobs). Pins the whole preempt/resume path — boundary events,
+#:   checkpoint billing, remnant re-dispatch — against silent drift.
+#: * **declined** — the seed-0 canonical workload with every job made
+#:   interruptible (0.5 s quantum): triggers are evaluated at dozens of
+#:   boundaries and decline every one, so the trace must be *identical*
+#:   to the plain ``min-energy|0`` trace (asserted digest-to-digest) —
+#:   the golden form of the differential identity.
+PRE_FIRE_KEY = "min-energy|preempt-fire|0"
+PRE_DECLINE_KEY = "min-energy|preempt-decline|0"
+PRE_FIRE_JOBS = 12
+PRE_DECLINE_QUANTUM = 0.5
 _GBDT = dict(iterations=80, depth=3, learning_rate=0.15)
 PREDICTOR_CONFIG = PredictorConfig(
     gbdt=GBDTParams(l2_leaf_reg=5.0, **_GBDT),
@@ -114,6 +134,9 @@ def compute_traces() -> dict:
     r = _capped_run()
     trace = trace_of(r.records)
     out[CAP_KEY] = {"digest": digest_of(trace), "records": trace}
+    for key, (res, _) in _preemptive_runs().items():
+        trace = trace_of(res.records)
+        out[key] = {"digest": digest_of(trace), "records": trace}
     _CACHE["traces"] = out
     return out
 
@@ -126,6 +149,34 @@ def _capped_run(cap_w: float = CAP_W):
         app_features=f["features"], n_devices=CAP_DEVICES,
         power_coordinator=PowerCapCoordinator(
             cap_w, grant_policy="slack-weighted", guard=CAP_GUARD))
+
+
+def _preemptive_runs() -> dict:
+    """The two preemptive canonical runs, keyed like the golden file;
+    values are (ScheduleResult, PreemptionManager) so the gate tests can
+    also assert the scenarios are not vacuous (fire really preempts,
+    declined really evaluates triggers)."""
+    if "preempt" in _CACHE:
+        return _CACHE["preempt"]
+    f = _fixture()
+    out = {}
+    jobs = list(rescue_stress_workload(f["apps"], f["testbed"],
+                                       n_jobs=PRE_FIRE_JOBS, seed=0,
+                                       n_devices=1))
+    mgr = PreemptionManager()
+    out[PRE_FIRE_KEY] = (
+        run_schedule(jobs, "min-energy", Testbed(seed=100),
+                     predictor=f["predictor"], app_features=f["features"],
+                     preemption=mgr), mgr)
+    jobs = [dataclasses.replace(j, checkpoint_quantum=PRE_DECLINE_QUANTUM)
+            for j in make_workload(f["apps"], f["testbed"], seed=0)]
+    mgr = PreemptionManager()
+    out[PRE_DECLINE_KEY] = (
+        run_schedule(jobs, "min-energy", Testbed(seed=100),
+                     predictor=f["predictor"], app_features=f["features"],
+                     preemption=mgr), mgr)
+    _CACHE["preempt"] = out
+    return out
 
 
 def load_golden() -> dict:
@@ -177,12 +228,57 @@ def test_capped_golden_is_binding():
     assert digest_of(capless) != compute_traces()[CAP_KEY]["digest"]
 
 
+@pytest.mark.parametrize("key", [PRE_FIRE_KEY, PRE_DECLINE_KEY])
+def test_preemptive_golden_trace(key):
+    """The preemptive canonical runs == their checked-in traces — the
+    preempt/resume path (boundary events, checkpoint billing, remnant
+    re-dispatch, declines) drift gate."""
+    golden = load_golden()["traces"][key]
+    fresh = compute_traces()[key]
+    for i, (got, want) in enumerate(zip(fresh["records"],
+                                        golden["records"])):
+        assert got == want, (
+            f"{key} record {i} drifted "
+            f"(columns: {_COLUMNS}):\n got {got}\nwant {want}")
+    assert len(fresh["records"]) == len(golden["records"])
+    assert fresh["digest"] == golden["digest"]
+
+
+def test_preemptive_golden_scenarios_not_vacuous():
+    """The fire trace must actually contain preemptions (split segments,
+    both rescue families exercised across the suite) and the declined
+    trace must have *evaluated* triggers at real boundaries — otherwise
+    either gate silently stops covering its path."""
+    runs = _preemptive_runs()
+    r_fire, m_fire = runs[PRE_FIRE_KEY]
+    assert r_fire.preemptions > 0
+    assert len(r_fire.records) > PRE_FIRE_JOBS     # split segments
+    assert m_fire.stats.preemptions == r_fire.preemptions
+    r_dec, m_dec = runs[PRE_DECLINE_KEY]
+    assert r_dec.preemptions == 0
+    assert m_dec.stats.boundaries > 0
+    assert m_dec.stats.checks > 0
+    assert m_dec.stats.declined == m_dec.stats.checks
+
+
+def test_preempt_declined_matches_plain_trace():
+    """Rescue declined ⇒ bit-identical schedule: the declined trace's
+    digest must equal the plain ``min-energy|0`` golden — the golden-file
+    form of the differential harness's identity contract."""
+    g = load_golden()["traces"]
+    assert g[PRE_DECLINE_KEY]["digest"] == g["min-energy|0"]["digest"]
+
+
 def test_golden_file_is_self_consistent():
     """Stored digests match the stored records (catches hand-edits)."""
     g = load_golden()
     expected = {f"{p}|{s}" for p in POLICY_NAMES for s in SEEDS}
-    expected.add(CAP_KEY)
+    expected |= {CAP_KEY, PRE_FIRE_KEY, PRE_DECLINE_KEY}
     assert set(g["traces"]) == expected
     for key, entry in g["traces"].items():
         assert digest_of(entry["records"]) == entry["digest"], key
-        assert len(entry["records"]) == len(PAPER_APPS), key
+        if key == PRE_FIRE_KEY:
+            # preempted jobs split into segments: one record per segment
+            assert len(entry["records"]) > PRE_FIRE_JOBS, key
+        else:
+            assert len(entry["records"]) == len(PAPER_APPS), key
