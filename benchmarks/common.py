@@ -1,7 +1,11 @@
-"""Shared fixtures for the paper-reproduction benchmarks (built once)."""
+"""Shared fixtures for the paper-reproduction benchmarks (built once),
+plus the persistent-result writer every bench uses for its committed
+``BENCH_<name>.json`` trajectory files (PR 6)."""
 from __future__ import annotations
 
 import functools
+import json
+import pathlib
 import time
 
 import numpy as np
@@ -32,3 +36,35 @@ def fixtures():
 
 def csv(name: str, wall_s: float, derived: str):
     print(f"{name},{wall_s * 1e6:.0f},{derived}")
+
+
+#: Repo root — BENCH_<name>.json files live here so the perf trajectory is
+#: versioned next to the code it measures.
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def bench_json_path(name: str) -> pathlib.Path:
+    """Canonical location of a bench's persisted results."""
+    return REPO_ROOT / f"BENCH_{name}.json"
+
+
+def write_bench_json(name: str, payload: dict,
+                     path: "str | pathlib.Path | None" = None) -> pathlib.Path:
+    """Persist one bench's results as deterministic JSON (sorted keys,
+    trailing newline — diffs stay reviewable). ``path=None`` writes the
+    canonical committed baseline ``BENCH_<name>.json`` at the repo root;
+    CI smoke runs pass an explicit temp path so they never clobber the
+    baseline they are compared against (scripts/check_perf.py)."""
+    p = pathlib.Path(path) if path is not None else bench_json_path(name)
+    p.write_text(json.dumps(payload, indent=2, sort_keys=True,
+                            default=str) + "\n")
+    return p
+
+
+def load_bench_json(name_or_path: "str | pathlib.Path") -> dict:
+    """Read a persisted bench result — by bench name (canonical baseline)
+    or explicit path."""
+    p = pathlib.Path(name_or_path)
+    if not p.suffix:
+        p = bench_json_path(str(name_or_path))
+    return json.loads(p.read_text())

@@ -4,10 +4,12 @@ Prints ``name,us_per_call,derived`` CSV lines per benchmark, plus
 ``# claim[...]`` validation lines tying each result to the paper's numbers.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig3,fig78,...]
+                                                [--json results.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -40,6 +42,9 @@ BENCHES = [
     ("preempt", "benchmarks.bench_preempt",
      "Beyond paper: preemptive rescue — checkpoint/resume, mid-job "
      "re-scaling; fewer misses at equal-or-lower energy"),
+    ("decide", "benchmarks.bench_decide",
+     "Vectorized decision core: scalar vs batched dispatch throughput, "
+     "100k-job / 8-device streams"),
     ("kernels", "benchmarks.bench_kernels",
      "Kernel micro-benchmarks"),
     ("roofline", "benchmarks.bench_roofline",
@@ -61,6 +66,9 @@ def main() -> None:
     ap.add_argument("--list", action="store_true",
                     help="print registered bench keys with descriptions "
                          "and exit")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a uniform {key: {ok, wall_s, result}} "
+                         "JSON summary for every bench that ran")
     args = ap.parse_args()
     if args.list:
         list_benches()
@@ -76,6 +84,7 @@ def main() -> None:
                      "descriptions)")
 
     failures = []
+    emitted: dict[str, dict] = {}
     t_all = time.time()
     for key, module, title in BENCHES:
         if only and key not in only:
@@ -84,11 +93,25 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(module, fromlist=["main"])
-            mod.main()
-            print(f"# {key} done in {time.time() - t0:.1f}s")
+            result = mod.main()
+            wall = time.time() - t0
+            emitted[key] = {"ok": True, "wall_s": round(wall, 2),
+                            "result": result}
+            print(f"# {key} done in {wall:.1f}s")
         except Exception:
             traceback.print_exc()
             failures.append(key)
+            emitted[key] = {"ok": False, "wall_s": round(time.time() - t0, 2),
+                            "result": None}
+    if args.json is not None:
+        # uniform emission: every registered bench that ran gets the same
+        # {ok, wall_s, result} shape; `result` is the bench main()'s own
+        # payload (None for benches that only print), serialized with a
+        # str() fallback so numpy scalars and paths never break the dump
+        with open(args.json, "w") as fh:
+            json.dump(emitted, fh, indent=2, sort_keys=True, default=str)
+            fh.write("\n")
+        print(f"# wrote {args.json}")
     print(f"\n=== benchmarks finished in {time.time() - t_all:.1f}s; "
           f"failures: {failures or 'none'} ===")
     if failures:

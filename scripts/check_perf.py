@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""Perf regression gate: compare a fresh bench_decide run against the
+committed BENCH_decide.json baseline (PR 6).
+
+Speedups (scalar/batched wall-time ratios) are compared rather than raw
+jobs/sec — ratios transfer across hosts, absolute throughput does not. The
+gate fails when:
+
+* any smoke-scenario speedup in the current run falls below the
+  baseline's by more than the tolerance band (default 40% — smoke runs
+  are 2k jobs and noisy; the band catches "the fast path stopped
+  engaging", not scheduler jitter);
+* any current scenario reports ``identical: false`` (the batched core
+  diverged from the scalar oracle — never acceptable);
+* the *committed baseline* lacks a full-scale section or its uniform
+  full-scale speedup is below the acceptance floor (>= 3x) — so the
+  baseline itself cannot quietly regress below the PR's acceptance
+  criterion.
+
+Usage::
+
+    python scripts/check_perf.py --current /tmp/bench_decide_smoke.json \
+        [--baseline BENCH_decide.json] [--tolerance 0.4]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+FULL_UNIFORM_FLOOR = 3.0
+
+
+def load(path: pathlib.Path) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", required=True,
+                    help="fresh bench_decide JSON (e.g. the CI smoke run)")
+    ap.add_argument("--baseline",
+                    default=str(REPO_ROOT / "BENCH_decide.json"),
+                    help="committed baseline (default: BENCH_decide.json)")
+    ap.add_argument("--tolerance", type=float, default=0.4,
+                    help="allowed fractional speedup drop vs baseline "
+                         "(default 0.4)")
+    args = ap.parse_args()
+
+    baseline = load(pathlib.Path(args.baseline))
+    current = load(pathlib.Path(args.current))
+    failures: list[str] = []
+
+    # 1) the committed baseline must itself carry the acceptance floor
+    full = baseline.get("full")
+    if not full or "uniform" not in full:
+        failures.append(
+            f"baseline {args.baseline} has no full-scale section — "
+            "regenerate with: python -m benchmarks.bench_decide")
+    else:
+        spd = full["uniform"]["speedup"]
+        if spd < FULL_UNIFORM_FLOOR:
+            failures.append(
+                f"baseline full uniform speedup {spd:.2f}x is below the "
+                f"{FULL_UNIFORM_FLOOR}x acceptance floor")
+        for name, row in full.items():
+            if not row.get("identical", False):
+                failures.append(f"baseline full:{name} identical=false")
+
+    # 2) the current run must match the scalar oracle everywhere
+    cur_smoke = current.get("smoke", {})
+    for name, row in cur_smoke.items():
+        if not row.get("identical", False):
+            failures.append(
+                f"current smoke:{name} diverged from the scalar oracle "
+                "(identical=false)")
+
+    # 3) smoke-vs-smoke speedup regression, with tolerance
+    base_smoke = baseline.get("smoke", {})
+    for name, brow in sorted(base_smoke.items()):
+        crow = cur_smoke.get(name)
+        if crow is None:
+            failures.append(f"current run is missing smoke:{name}")
+            continue
+        floor = brow["speedup"] * (1.0 - args.tolerance)
+        status = "OK" if crow["speedup"] >= floor else "REGRESSED"
+        print(f"perf-gate smoke:{name}: current {crow['speedup']:.2f}x vs "
+              f"baseline {brow['speedup']:.2f}x (floor {floor:.2f}x) "
+              f"[{status}]")
+        if crow["speedup"] < floor:
+            failures.append(
+                f"smoke:{name} speedup {crow['speedup']:.2f}x fell below "
+                f"{floor:.2f}x (baseline {brow['speedup']:.2f}x - "
+                f"{args.tolerance:.0%})")
+
+    if failures:
+        print("\nperf gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("perf gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

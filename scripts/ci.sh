@@ -26,6 +26,12 @@ python -m benchmarks.bench_powercap --smoke
 echo "=== smoke: preemptive-rescue gate ==="
 python -m benchmarks.bench_preempt --smoke
 
+echo "=== smoke: vectorized decision core + perf regression gate ==="
+DECIDE_JSON="$(mktemp /tmp/bench_decide_smoke.XXXXXX.json)"
+python -m benchmarks.bench_decide --smoke --json "$DECIDE_JSON"
+python scripts/check_perf.py --current "$DECIDE_JSON"
+rm -f "$DECIDE_JSON"
+
 echo "=== differential harness: preemptive-engine identity + conservation ==="
 python -m pytest -q tests/test_differential.py
 

@@ -16,7 +16,9 @@ from .workload import (Job, cap_stress_workload, drift_profile,
                        drifting_workload, heterogeneous_workload,
                        make_device_pool, make_workload,
                        rescue_stress_workload, stream_workload)
-from .prediction_service import ClockTable, PredictionService, ServiceStats
+from .prediction_service import (ClockTable, PredictionService, ServiceStats,
+                                 StackedTable, kernel_min_rows_default)
+from .batch_decide import DecisionCore, DecisionStats
 from .policies import (BudgetManager, DeviceCandidate, Policy,
                        QueueAwareBudget, RiskAware, VirtualPacingBudget,
                        resolve_policy)
@@ -41,7 +43,8 @@ __all__ = [
     "CorrelationIndex", "Job", "make_workload", "stream_workload",
     "drifting_workload", "drift_profile",
     "heterogeneous_workload", "make_device_pool", "cap_stress_workload",
-    "ClockTable", "PredictionService", "ServiceStats",
+    "ClockTable", "PredictionService", "ServiceStats", "StackedTable",
+    "kernel_min_rows_default", "DecisionCore", "DecisionStats",
     "BudgetManager", "DeviceCandidate", "Policy", "QueueAwareBudget",
     "RiskAware", "VirtualPacingBudget",
     "resolve_policy", "EngineHooks", "EventEngine",

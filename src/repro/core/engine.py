@@ -59,6 +59,19 @@ Invariants:
   capless engine (tests/test_powercap.py, bench_powercap). A finite cap
   turns each dispatch into offer → filtered selection → (escalate →)
   dispatch-or-defer → commit; see :mod:`repro.core.powercap`.
+* **Batched-mode identity (PR 6).** ``batch_decide=True`` (the default)
+  swaps the scalar per-decision scans for the vectorized decision core —
+  compiled selection ladders, the stacked joint scorer
+  (:meth:`~repro.core.policies.Policy.batch_scores`), batched ladder
+  prefetch, and the cached measurement substrate (:mod:`repro.core.
+  batch_decide`). Every fast path is individually gated to the exact
+  stock implementation it reproduces (subclassed policies/testbeds fall
+  back to the scalar code automatically) and is bit-identical to it —
+  records, RNG stream, and golden traces unchanged
+  (tests/test_batch_decide.py pins this across all policies × pools ×
+  caps × preemption). ``batch_decide=False`` disables all of it; that
+  retained scalar path is the bit-identity oracle benchmarks/
+  bench_decide.py measures against.
 * **Preemption identity & conservation.** With ``preemption=None`` (the
   default) the plain loop runs untouched; with a
   :class:`~repro.core.preemption.PreemptionManager` whose triggers never
@@ -78,10 +91,11 @@ from typing import Callable, Iterable, Iterator, Optional, Sequence
 
 import numpy as np
 
+from .batch_decide import DecisionCore
 from .dvfs import ClockPair, DeviceClass
 from .policies import (BudgetManager, DeviceCandidate, Policy,
                        resolve_policy)
-from .prediction_service import PredictionService
+from .prediction_service import PredictionService, StackedTable
 from .simulator import Testbed
 from .workload import Job
 
@@ -276,6 +290,7 @@ class EventEngine:
         device_classes: Optional[Sequence[DeviceClass]] = None,
         power_coordinator: Optional[object] = None,
         preemption: Optional[object] = None,
+        batch_decide: bool = True,
     ):
         self.testbed = testbed
         self.policy = resolve_policy(policy, testbed.dvfs)
@@ -326,6 +341,51 @@ class EventEngine:
             # ladder and base table (also surfaces name conflicts early)
             for cls in self.device_classes:
                 service.register_class(cls)
+
+        #: Vectorized decision core (PR 6): compiled selection ladders,
+        #: the stacked joint scorer, batched ladder prefetch, and the
+        #: cached measurement substrate. On by default — each fast path
+        #: is gated (below) to the exact stock implementation it
+        #: reproduces, so any subclassed policy/testbed hook silently
+        #: falls back to the scalar code; ``batch_decide=False`` disables
+        #: everything, and that scalar path is the bit-identity oracle
+        #: the tests and bench_decide compare against.
+        self.batch_decide = bool(batch_decide)
+        self._core = DecisionCore()
+        pol_t = type(self.policy)
+        defaults_ok = (
+            pol_t.select_device_clock is Policy.select_device_clock
+            and pol_t.class_score is Policy.class_score
+            and pol_t.select_for_class is Policy.select_for_class)
+        # preemption gates every table-shaped fast path: remnant views are
+        # fresh objects per decision, so ladders/stacked views never hit
+        base_ok = self.batch_decide and self.preemption is None
+        self._ladder_ok = base_ok and DecisionCore.compilable(self.policy)
+        self._joint_ladder = self._ladder_ok and defaults_ok
+        self._batch_joint = (base_ok and defaults_ok and service is not None
+                             and getattr(self.policy, "batchable", False))
+        self._fast_measure = (self.batch_decide
+                              and DecisionCore.fast_measure_safe(testbed))
+        self._prefetch = (self.batch_decide and service is not None
+                          and self.policy.table_kind == "predicted"
+                          and service.has_predictor)
+        if self._prefetch and self.device_classes is not None:
+            self._prefetch_classes: tuple = tuple(
+                {c.name: c for c in self.device_classes}.values())
+        else:
+            self._prefetch_classes = (None,)
+        # scratch lists reused across decisions by the multi-class
+        # candidate gather and the admit-time prefetch (see _decide)
+        self._co_free: list[tuple[float, int]] = []
+        self._held: list[tuple[float, int]] = []
+        self._admitted: list[str] = []
+
+    @property
+    def decision_stats(self):
+        """Vectorized-core counters (ladder/measure cache hits, batched
+        joint decisions) — see :class:`~repro.core.batch_decide.
+        DecisionStats`."""
+        return self._core.stats
 
     # ------------------------------------------------------------------ #
     def _table_for(self, job: Job,
@@ -408,6 +468,66 @@ class EventEngine:
             return tab
         return self.preemption.remnant_view(tab, job)
 
+    def _select_class(self, job: Job, budget: float, tab, cdvfs):
+        """Per-class clock choice — through the compiled ladder when the
+        policy's scalar scan has a compiled form (bit-identical; see
+        :mod:`repro.core.batch_decide`), the policy itself otherwise."""
+        if self._ladder_ok and tab is not None:
+            return self._core.select(self.policy, job, budget, tab)
+        return self.policy.select_for_class(job, budget, tab, dvfs=cdvfs)
+
+    def _stacked_for(self, job: Job, cands) -> StackedTable:
+        """The stacked (candidate × clock) view backing a batched joint
+        decision — served from the service's LRU cache and validated
+        row-by-row against the candidates' actual tables (identity, not
+        equality: a corrected-table swap must void the batch), with an
+        ad-hoc stack as the fallback when any row diverges."""
+        kind = self.policy.table_kind
+        ident = job.name if kind == "predicted" else job.app
+        stk = self.service.stacked_tables(
+            ident, tuple(c.device_class for c in cands), kind=kind)
+        for t, c in zip(stk.tables, cands):
+            if t is not c.table:
+                return StackedTable.from_tables([c.table for c in cands])
+        return stk
+
+    def _joint_select(self, job: Job, cands):
+        """Joint (class, clock) decision on the capless path, fastest
+        eligible tier first: one batched feasible-mask → argmin pass when
+        the policy vouches for the vectorized form
+        (:meth:`~repro.core.policies.Policy.batch_scores`), per-candidate
+        compiled ladders under the default ranking otherwise, the scalar
+        ``select_device_clock`` loop as the final fallback. All three
+        produce the same (index, selection) on the same candidates —
+        same floats, same earliest-free/lowest-index tie-breaks."""
+        if self._batch_joint and len(cands) > 1:
+            out = self.policy.batch_scores(
+                job, cands[0].budget, self._stacked_for(job, cands))
+            if out is not None:
+                self._core.stats.batched_joint += 1
+                return out
+        if self._joint_ladder:
+            best_i, best_sel, best_score = 0, None, None
+            for i, cand in enumerate(cands):
+                sel = self._select_class(job, cand.budget, cand.table,
+                                         cand.dvfs)
+                score = self.policy.class_score(job, cand, sel)
+                if best_sel is None or score < best_score:
+                    best_i, best_sel, best_score = i, sel, score
+            self._core.stats.ladder_joint += 1
+            return best_i, best_sel
+        return self.policy.select_device_clock(job, cands)
+
+    def _measure(self, app, clock, rng, run_dvfs):
+        """One dispatch measurement: the cached-truth fast path when the
+        testbed is the stock simulator (bit-identical — the same two
+        sequential noise draws on the same RNG stream), the testbed's own
+        ``run`` for any subclass that redefines the physics."""
+        if self._fast_measure:
+            return self._core.measure(self.testbed, app, clock, rng,
+                                      dvfs=run_dvfs)
+        return self.testbed.run(app, clock, rng=rng, dvfs=run_dvfs)
+
     def _decide(self, job: Job, budget: float, start: float, dev: int,
                 orig_free_t: float, free, queue, coord,
                 running=None, finalize=None):
@@ -428,8 +548,7 @@ class EventEngine:
             tab = self._view(self._table_for(job, chosen_class), job)
             cdvfs = None if chosen_class is None else chosen_class.dvfs
             if coord is None:
-                sel = self.policy.select_for_class(job, budget, tab,
-                                                   dvfs=cdvfs)
+                sel = self._select_class(job, budget, tab, cdvfs)
                 needed = None
             else:
                 grant = coord.offer(dev, job, start, queue)
@@ -445,8 +564,10 @@ class EventEngine:
             # plain heap order) and offer the policy one candidate per
             # distinct class, earliest-free first, pushing the losers
             # back untouched
-            others: list[tuple[float, int]] = []
-            held: list[tuple[float, int]] = []
+            others = self._co_free     # scratch, reused across decisions:
+            held = self._held          # the gather never outlives the call
+            others.clear()
+            held.clear()
             while free and free[0][0] <= start:
                 t2, dv = heapq.heappop(free)
                 seg2 = running.get(dv) if running is not None else None
@@ -461,7 +582,8 @@ class EventEngine:
             for ent in held:
                 heapq.heappush(free, ent)
             others.sort()
-            entries = [(orig_free_t, dev)] + others
+            others.insert(0, (orig_free_t, dev))
+            entries = others
             reps: list[tuple[float, int]] = []
             cands: list[DeviceCandidate] = []
             seen: set[str] = set()
@@ -479,7 +601,10 @@ class EventEngine:
                         cls, budget, tab_c,
                         power_cap=coord.offer(ent[1], job, start, queue),
                         guard=coord.guard))
-            ci, sel = self.policy.select_device_clock(job, cands)
+            if coord is None:
+                ci, sel = self._joint_select(job, cands)
+            else:
+                ci, sel = self.policy.select_device_clock(job, cands)
             chosen = reps[ci]
             for ent in entries:
                 if ent != chosen:
@@ -580,10 +705,20 @@ class EventEngine:
                 job = stream.pop()
                 heapq.heappush(queue, (job.deadline, counter, job))
                 counter += 1
+                if self._prefetch:
+                    self._admitted.append(job.name)
                 for bm in self.budget_managers:
                     bm.on_admit(job)
                 if self.hooks.on_admit:
                     self.hooks.on_admit(job, free_t)
+            if self._admitted:
+                # batched ladder prefetch: every missing (app, class) table
+                # for this admission wave in one stacked predictor call —
+                # the batch shape that routes through the Pallas GBDT
+                # kernel, bit-identical to the lazy per-app builds
+                self.service.prefetch_tables(self._admitted,
+                                             self._prefetch_classes)
+                self._admitted.clear()
             if not queue:
                 heapq.heappush(free, (free_t, dev))
                 continue
@@ -636,7 +771,7 @@ class EventEngine:
                 self.hooks.on_dispatch(job, dev, clock, start)
             self.device_clocks[dev] = clock
 
-            meas = self.testbed.run(job.app, clock, rng=rng, dvfs=run_dvfs)
+            meas = self._measure(job.app, clock, rng, run_dvfs)
             end = start + meas.time_s
             rec = ExecutionRecord(
                 job_id=job.job_id, name=job.name, arrival=job.arrival,
@@ -724,10 +859,16 @@ class EventEngine:
                 j = stream.pop()
                 heapq.heappush(queue, (j.deadline, counter, j))
                 counter += 1
+                if self._prefetch:
+                    self._admitted.append(j.name)
                 for bm in self.budget_managers:
                     bm.on_admit(j)
                 if self.hooks.on_admit:
                     self.hooks.on_admit(j, upto)
+            if self._admitted:
+                self.service.prefetch_tables(self._admitted,
+                                             self._prefetch_classes)
+                self._admitted.clear()
 
         def finalize(seg: _RunningSeg) -> None:
             if seg.done:
@@ -871,7 +1012,7 @@ class EventEngine:
                 self.hooks.on_dispatch(job, dev, clock, start)
             self.device_clocks[dev] = clock
 
-            meas = self.testbed.run(job.app, clock, rng=rng, dvfs=run_dvfs)
+            meas = self._measure(job.app, clock, rng, run_dvfs)
             restore_s = cfg.restore_s if job.segment > 0 else 0.0
             restore_j = cfg.restore_j if job.segment > 0 else 0.0
             seg_time = job.work_frac * meas.time_s + restore_s

@@ -153,6 +153,14 @@ class Policy:
 
     name: str = ""
     table_kind: str = "none"
+    #: Whether :meth:`batch_scores`'s vectorized feasible-mask →
+    #: energy-argmin reformulation reproduces this policy's
+    #: ``select_for_class``/``class_score`` semantics exactly. Deliberately
+    #: opt-in (False here, True on the argmin-energy family): a subclass
+    #: with a custom ``select_clock`` scan is not batchable unless it says
+    #: so, and the engine falls back to the scalar path — never a silent
+    #: behavior change.
+    batchable: bool = False
 
     def __init__(self, dvfs: DVFSConfig):
         self.dvfs = dvfs
@@ -160,6 +168,12 @@ class Policy:
     def select_clock(self, job: Job, budget: float,
                      table: Optional[ClockTable]) -> ClockSelection:
         raise NotImplementedError
+
+    def _margin_for(self, job: Job) -> float:
+        """Deadline-guard inflation on predicted times (0 by default;
+        :class:`MinEnergy`/:class:`RiskAware` override). The one hook the
+        batched scorer needs to reproduce ``T_guard = T * (1 + margin)``."""
+        return 0.0
 
     # -- heterogeneous pools ------------------------------------------- #
     def select_for_class(self, job: Job, budget: float,
@@ -365,6 +379,51 @@ class Policy:
                 best_i, best_sel, best_score = i, sel, score
         return best_i, best_sel
 
+    # -- batched joint scoring (PR 6) ----------------------------------- #
+    def batch_scores(self, job: Job, budget: float,
+                     stacked) -> Optional[tuple[int, ClockSelection]]:
+        """Vectorized reformulation of the :meth:`select_for_class` →
+        :meth:`class_score` → strict-``<`` joint decision over a
+        :class:`~repro.core.prediction_service.StackedTable` of candidate
+        rows (earliest-free first, all sharing one ``budget``): one fused
+        feasible-mask → predicted-energy argmin over the (candidates ×
+        padded clocks) block instead of a per-candidate Python loop.
+
+        Tie-breaks are the scalar path's, exactly: row-wise ``np.argmin``
+        keeps the lowest ladder index among equal-energy feasible clocks
+        (voltage-floor plateau ties), and the final cross-candidate
+        comparison uses the same strict-``<`` score tuples, so equal
+        scores keep the earliest-free, lowest-device-index candidate.
+
+        Returns ``(candidate_index, selection)`` — bit-identical to
+        :meth:`select_device_clock` on the same candidates — or ``None``
+        when the policy is not :attr:`batchable` (scan-order policies like
+        d-dvfs; the engine then takes the scalar/compiled-ladder path)."""
+        if not self.batchable:
+            return None
+        margin = self._margin_for(job)
+        T, P = stacked.T, stacked.P
+        Tg = T * (1.0 + margin)
+        feas = Tg <= budget           # padded slots are +inf: never admitted
+        E = np.where(feas, P * T, np.inf)
+        row_best = np.argmin(E, axis=1)        # first occurrence per row
+        rows = np.arange(len(stacked.tables))
+        best_E = E[rows, row_best]
+        row_feas = feas.any(axis=1)
+        min_T = np.where(stacked.mask, T, np.inf).min(axis=1)
+        best_i, best_score = 0, None
+        for i in range(len(stacked.tables)):
+            score = ((0, float(best_E[i])) if row_feas[i]
+                     else (1, float(min_T[i])))
+            if best_score is None or score < best_score:
+                best_i, best_score = i, score
+        if not row_feas[best_i]:
+            return best_i, ClockSelection(None)
+        tab = stacked.tables[best_i]
+        j = int(row_best[best_i])
+        return best_i, ClockSelection(tab.clocks[j], float(tab.P[j]),
+                                      float(tab.T[j]))
+
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return f"{type(self).__name__}({self.name!r})"
 
@@ -421,6 +480,7 @@ class MinEnergy(Policy):
 
     name = "min-energy"
     table_kind = "predicted"
+    batchable = True      # select_clock IS the feasible-mask/argmin pattern
     margin: float = 0.0
 
     def _margin_for(self, job: Job) -> float:
@@ -467,6 +527,7 @@ class Oracle(Policy):
 
     name = "oracle"
     table_kind = "truth"
+    batchable = True      # T <= budget mask + argmin T·P: the same pattern
 
     def select_clock(self, job, budget, table):
         E = np.where(table.T <= budget, table.T * table.P, np.inf)

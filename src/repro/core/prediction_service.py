@@ -59,7 +59,9 @@ Invariants (the contracts tests/test_online.py and tests/test_engine.py pin):
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import os
 from typing import Optional, Sequence
 
 import numpy as np
@@ -70,7 +72,41 @@ from .features import clock_features
 from .predictor import EnergyTimePredictor
 from .simulator import AppProfile, Testbed
 
-__all__ = ["ClockTable", "ServiceStats", "PredictionService"]
+__all__ = ["ClockTable", "StackedTable", "ServiceStats", "PredictionService",
+           "DEFAULT_KERNEL_MIN_ROWS", "KERNEL_MIN_ROWS_ENV",
+           "kernel_min_rows_default"]
+
+#: Measured batch-routing threshold for the Pallas GBDT kernel
+#: (:mod:`repro.kernels.gbdt_predict`): predictor batches with at least
+#: this many rows go through the one-hot-matmul kernel when a TPU backend
+#: is present. The default is sized from the microbench in
+#: ``benchmarks/bench_decide.py`` (``kernel_threshold`` section): a single
+#: ladder-table build is 64 rows (v5e) — far too small to amortize a
+#: kernel launch — while the multi-app :meth:`PredictionService.
+#: prefetch_tables` batches (8+ apps × 64 clocks ≥ 512 rows) sit exactly
+#: at the measured spill point where the numpy GBDT path leaves its
+#: cache-resident regime (per-row cost degrades several-fold past ~512
+#: rows on the reference host — the MXU matmul formulation does not). On
+#: CPU the kernel only runs in interpret mode, so auto-routing
+#: additionally requires a real TPU.
+DEFAULT_KERNEL_MIN_ROWS = 512
+
+#: Environment override for the threshold (an integer; values ≤ 0 route
+#: every batch): lets a deployment retune the crossover without code
+#: changes after running the bench_decide microbench on its own hardware.
+KERNEL_MIN_ROWS_ENV = "REPRO_GBDT_KERNEL_MIN_ROWS"
+
+
+def kernel_min_rows_default() -> int:
+    """The effective default kernel-routing threshold: the env override
+    when set (and parseable), else :data:`DEFAULT_KERNEL_MIN_ROWS`."""
+    raw = os.environ.get(KERNEL_MIN_ROWS_ENV)
+    if raw:
+        try:
+            return int(raw)
+        except ValueError:
+            pass
+    return DEFAULT_KERNEL_MIN_ROWS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +140,44 @@ class ClockTable:
                           source=self.source)
 
 
+@dataclasses.dataclass(frozen=True)
+class StackedTable:
+    """Padded/masked (candidate × clock) tensor view over per-(app, class)
+    :class:`ClockTable` rows — the batched decision core's input (PR 6).
+
+    Component ladders of different lengths (v5e: 64 clocks, v5lite: 24)
+    are padded to a common width with ``+inf`` in both ``P`` and ``T``
+    (``mask`` False there), so a feasibility test ``T' <= budget`` can
+    never admit a padded slot and a masked row minimum ignores it. The
+    component tables are retained for identity checks (a stacked view is
+    valid only while every row *is* the table a decision would fetch) and
+    for recovering exact per-row clock objects after an argmin."""
+
+    tables: tuple[ClockTable, ...]
+    P: np.ndarray                 # (C, Lmax) padded power, pad = +inf
+    T: np.ndarray                 # (C, Lmax) padded time, pad = +inf
+    mask: np.ndarray              # (C, Lmax) bool, True on real entries
+    lengths: tuple[int, ...]
+
+    def __len__(self) -> int:
+        return len(self.tables)
+
+    @classmethod
+    def from_tables(cls, tables: Sequence[ClockTable]) -> "StackedTable":
+        tables = tuple(tables)
+        lengths = tuple(len(t) for t in tables)
+        C, L = len(tables), max(lengths)
+        P = np.full((C, L), np.inf)
+        T = np.full((C, L), np.inf)
+        mask = np.zeros((C, L), dtype=bool)
+        for i, t in enumerate(tables):
+            n = lengths[i]
+            P[i, :n] = t.P
+            T[i, :n] = t.T
+            mask[i, :n] = True
+        return cls(tables=tables, P=P, T=T, mask=mask, lengths=lengths)
+
+
 @dataclasses.dataclass
 class ServiceStats:
     table_builds: int = 0         # vectorized ladder-table constructions
@@ -116,6 +190,9 @@ class ServiceStats:
     corrected_builds: int = 0     # corrected-view (re)applications
     corrected_hits: int = 0       # decisions served from the corrected cache
     invalidations: int = 0        # targeted corrected-cache invalidations
+    stacked_builds: int = 0       # stacked (candidate x clock) view builds
+    stacked_hits: int = 0         # joint decisions served from stacked cache
+    prefetched_tables: int = 0    # tables built via batched prefetch
 
     def summary(self) -> str:
         return (f"table_builds={self.table_builds} hits={self.table_hits} "
@@ -148,8 +225,9 @@ class PredictionService:
         corr_features: Optional[dict[str, np.ndarray]] = None,
         testbed: Optional[Testbed] = None,
         use_kernel: bool | str = "auto",
-        kernel_min_rows: int = 512,
+        kernel_min_rows: Optional[int] = None,
         class_features: Optional[dict[str, dict[str, np.ndarray]]] = None,
+        stacked_cache_size: int = 128,
     ):
         self.dvfs = dvfs
         self.predictor = predictor
@@ -158,7 +236,11 @@ class PredictionService:
         self.corr_features = corr_features
         self.testbed = testbed
         self.use_kernel = use_kernel
-        self.kernel_min_rows = int(kernel_min_rows)
+        # None → the module default, overridable via KERNEL_MIN_ROWS_ENV
+        self.kernel_min_rows = int(kernel_min_rows
+                                   if kernel_min_rows is not None
+                                   else kernel_min_rows_default())
+        self.stacked_cache_size = int(stacked_cache_size)
         #: per-class app profile vectors (``{class_name: {app: feats}}``) —
         #: the "profile once per device class" campaign. Apps/classes not
         #: listed fall back to the shared ``app_features`` (+ correlation).
@@ -173,6 +255,14 @@ class PredictionService:
         # own dvfs — a DeviceClass wrapping the same config normalizes to
         # None, so uniform pools share today's cache entries bit-for-bit.
         self._corrected: dict[tuple[str, Optional[str]], ClockTable] = {}
+        # stacked (candidate x clock) views, LRU-bounded; entries carry the
+        # correction epoch they were built at — any corrector attach/detach/
+        # invalidate bumps the epoch and lazily voids every stacked view
+        # without scanning the cache (base/truth tables never invalidate,
+        # so epoch-stale entries simply rebuild from the same components)
+        self._stacked: "collections.OrderedDict[tuple, tuple[int, StackedTable]]" = (
+            collections.OrderedDict())
+        self._epoch = 0
         self._tables: dict[tuple, ClockTable] = {}
         self._truth: dict[tuple, ClockTable] = {}
         self._resolved: dict[str, tuple[tuple, np.ndarray]] = {}
@@ -351,12 +441,14 @@ class PredictionService:
         corrected views are dropped; base caches are untouched."""
         self._corrector = corrector
         self._corrected.clear()
+        self._epoch += 1
 
     def detach_corrector(self) -> None:
         """Remove the correction layer — the service reverts bit-identically
         to the frozen path."""
         self._corrector = None
         self._corrected.clear()
+        self._epoch += 1
 
     @property
     def corrector(self):
@@ -370,6 +462,7 @@ class PredictionService:
         number of entries dropped. Base tables are pure functions of frozen
         inputs and are deliberately *not* invalidatable."""
         self.stats.invalidations += 1
+        self._epoch += 1
         if name is None:
             n = len(self._corrected)
             self._corrected.clear()
@@ -391,6 +484,91 @@ class PredictionService:
         P = self._predict(self.predictor.power, X)
         T = self._predict(self.predictor.time, X)
         return ClockTable(clocks=clocks, P=P, T=T, source="predicted")
+
+    # ------------------------------------------------------------------ #
+    #  Stacked candidate views + batched prefetch (PR 6)
+    # ------------------------------------------------------------------ #
+    def stacked_tables(self, name_or_app, device_classes: Sequence,
+                       kind: str = "predicted") -> StackedTable:
+        """The padded/masked per-(app, class-tuple) tensor view the batched
+        joint decision scores in one pass (see :class:`StackedTable`).
+
+        Cache-keyed like the per-app tables — ``(kind, app identity, class
+        names)``, where identity is the app *name* for predicted tables and
+        the frozen profile for truth tables (the same keying rule as
+        :meth:`table` vs :meth:`truth_table`) — LRU-bounded by
+        ``stacked_cache_size``, and epoch-validated: any corrector attach/
+        detach/:meth:`invalidate` voids cached views lazily. Component rows
+        are the *same objects* :meth:`table`/:meth:`truth_table` serve, so
+        a consumer can verify row identity in O(classes)."""
+        classes = tuple(device_classes)
+        key = (kind, name_or_app,
+               tuple(c.name if c is not None else None for c in classes))
+        entry = self._stacked.get(key)
+        if entry is not None and entry[0] == self._epoch:
+            self._stacked.move_to_end(key)
+            self.stats.stacked_hits += 1
+            return entry[1]
+        if kind == "truth":
+            comps = [self.truth_table(name_or_app, c) for c in classes]
+        elif kind == "predicted":
+            comps = [self.table(name_or_app, c) for c in classes]
+        else:
+            raise ValueError(f"unknown stacked-table kind {kind!r}")
+        stk = StackedTable.from_tables(comps)
+        self._stacked[key] = (self._epoch, stk)
+        self._stacked.move_to_end(key)
+        while len(self._stacked) > self.stacked_cache_size:
+            self._stacked.popitem(last=False)
+        self.stats.stacked_builds += 1
+        return stk
+
+    def prefetch_tables(self, names: Sequence[str],
+                        device_classes: Sequence = (None,)) -> int:
+        """Build every missing (app, class) base table in **one** stacked
+        predictor call per (class, regressor) — the batch shape that routes
+        through the Pallas ``gbdt_predict`` kernel when it clears
+        ``kernel_min_rows`` (n_missing_apps × ladder rows, vs one ladder at
+        a time on the lazy path). Row-identical to building tables one app
+        at a time: the GBDT/linear predictors are strictly rowwise, so
+        slicing a stacked prediction reproduces the per-app arrays
+        bit-for-bit (pinned in tests/test_batch_decide.py).
+
+        Returns the number of tables built (correlated apps sharing a
+        resolved profile count once, exactly like :meth:`base_table`)."""
+        built = 0
+        for cls in device_classes:
+            ck = self.register_class(cls)
+            if ck is None:
+                clocks, clock_X = self.clocks, self._clock_X
+            else:
+                clocks, clock_X = self._class_clocks[ck]
+            todo: list[tuple[tuple, np.ndarray]] = []
+            seen: set = set()
+            for name in names:
+                feat_key, feats = self._feats_for(name, ck)
+                key = (feat_key, ck)
+                if key in self._tables or key in seen:
+                    continue
+                seen.add(key)
+                todo.append((key, feats))
+            if not todo:
+                continue
+            L = len(clocks)
+            X = np.stack([np.concatenate([feats, cx])
+                          for _, feats in todo for cx in clock_X])
+            P = self._predict(self.predictor.power, X)
+            T = self._predict(self.predictor.time, X)
+            for i, (key, _) in enumerate(todo):
+                tab = ClockTable(clocks=clocks,
+                                 P=P[i * L:(i + 1) * L].copy(),
+                                 T=T[i * L:(i + 1) * L].copy(),
+                                 source="predicted")
+                self._tables[key] = tab
+                self.stats.table_builds += 1
+                self.stats.prefetched_tables += 1
+                built += 1
+        return built
 
     def _predict(self, target, X: np.ndarray) -> np.ndarray:
         """One regressor over a batch; routes big GBDT batches to Pallas."""

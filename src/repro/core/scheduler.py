@@ -117,6 +117,7 @@ def run_schedule(
     device_classes: "Sequence[DeviceClass] | None" = None,
     power_coordinator: object | None = None,
     preemption: object | None = None,
+    batch_decide: bool = True,
 ) -> ScheduleResult:
     """Event-driven schedule execution on the simulated testbed.
 
@@ -157,6 +158,12 @@ def run_schedule(
     on another device class). ``None`` (default) runs the untouched
     non-preemptive loop; a manager whose triggers never fire is
     bit-identical to it (tests/test_differential.py).
+
+    ``batch_decide``: enable the vectorized decision core (PR 6) —
+    compiled selection ladders, batched joint scoring, and the cached
+    measurement substrate, all bit-identical to the scalar decision path
+    (the default). ``False`` runs the original scalar code — the
+    bit-identity oracle ``benchmarks/bench_decide.py`` measures against.
     """
     if isinstance(policy, Policy):
         pol, policy = policy, policy.name
@@ -224,6 +231,7 @@ def run_schedule(
         device_classes=device_classes,
         power_coordinator=power_coordinator,
         preemption=preemption,
+        batch_decide=batch_decide,
     )
     return engine.run(jobs)
 

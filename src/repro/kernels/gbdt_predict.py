@@ -18,6 +18,15 @@ adaptation note).
 Grid: (row blocks, tree blocks), tree dim innermost and sequential,
 accumulating into a VMEM scratch; BlockSpecs stage (BN, F) row tiles and
 (BT·D, F) one-hot tiles.
+
+Routing: the prediction service only sends batches of at least
+``repro.core.prediction_service.DEFAULT_KERNEL_MIN_ROWS`` rows here (env
+override ``REPRO_GBDT_KERNEL_MIN_ROWS``; ≤ 0 routes everything) — the
+threshold sits where the numpy ensemble leaves its cache-resident regime,
+measured by the ``kernel_threshold`` microbench in
+``benchmarks/bench_decide.py``. Single-ladder builds stay on numpy; the
+batched admission-time prefetch (PR 6) is the caller that reaches kernel
+scale.
 """
 from __future__ import annotations
 

@@ -1,0 +1,537 @@
+"""Vectorized decision core (PR 6): bit-identity and property pinning.
+
+The batched engine (``batch_decide=True``, the default) must be
+indistinguishable from the scalar engine in everything except wall time:
+same records, same floats, same RNG draws, same tie-breaks. This suite
+pins that contract from four directions:
+
+* **Engine identity** — the full acceptance grid: every policy ×
+  {uniform, heterogeneous} pools × {capless, binding cap} × preemption
+  {absent, disabled, armed}, records compared field-for-field; plus a
+  hypothesis-sampled sweep over seeds/quanta and a free-heap invariant
+  check through the multi-class candidate gather (the scratch-list reuse
+  must leave the heap a heap).
+* **Compiled ladders** — :class:`~repro.core.batch_decide.DecisionCore`
+  selections vs the scalar ``select_clock`` scans on randomized tables
+  and budgets for the whole compilable family, including the d-dvfs
+  first-accept recurrence and voltage-floor plateau ties, plus LRU/stats
+  behavior of the ladder cache.
+* **Batched joint scoring** — ``Policy.batch_scores`` over padded
+  :class:`~repro.core.prediction_service.StackedTable` views vs the
+  scalar ``select_device_clock`` loop, including single-clock ladders
+  stacked against full-length ones (padding must never be admitted).
+* **Service substrate** — stacked-view caching/epoch invalidation,
+  batched prefetch row-identity, the kernel-routing knob's env override,
+  and the cached measurement path vs ``Testbed.run``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # not installed in this container — deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.configs.paper_suite import PAPER_APPS
+from repro.core import (
+    EnergyTimePredictor, PowerCapCoordinator, PredictionService,
+    PredictorConfig, PreemptionConfig, PreemptionManager, Testbed,
+    V5E_CLASS, V5E_DVFS, V5LITE_CLASS, V5P_CLASS, build_dataset,
+    heterogeneous_workload, make_device_pool, profile_features,
+    run_schedule, stream_workload,
+)
+from repro.core.batch_decide import DecisionCore
+from repro.core.engine import EventEngine
+from repro.core.gbdt import GBDTParams
+from repro.core.policies import (DeviceCandidate, MinEnergy, PaperDDVFS,
+                                 POLICY_NAMES, RiskAware, resolve_policy)
+from repro.core.prediction_service import (
+    ClockTable, DEFAULT_KERNEL_MIN_ROWS, KERNEL_MIN_ROWS_ENV, StackedTable,
+    kernel_min_rows_default)
+from repro.core.simulator import Measurement
+
+APPS = list(PAPER_APPS)[:6]
+SMALL = PredictorConfig(
+    gbdt=GBDTParams(iterations=60, depth=3, learning_rate=0.15,
+                    l2_leaf_reg=5.0),
+    gbdt_time=GBDTParams(iterations=60, depth=3, learning_rate=0.15,
+                         l2_leaf_reg=3.0),
+)
+
+#: The two pool shapes of the acceptance grid: a classless uniform pool
+#: (per-device scalar decision) and a mixed pool (joint placement through
+#: the candidate gather + stacked scorer).
+_POOLS = (
+    ("uniform", None, 4),
+    ("hetero", make_device_pool((V5P_CLASS, 1), (V5E_CLASS, 2),
+                                (V5LITE_CLASS, 1)), 4),
+)
+
+_OFF = PreemptionConfig(self_rescue=False, queue_rescue=False)
+_ARMED = PreemptionConfig(margin=0.02, min_remnant_frac=0.02)
+
+
+@functools.lru_cache(maxsize=1)
+def _fixture():
+    tb = Testbed(seed=0)
+    X, yp, yt, _ = build_dataset(APPS, tb, seed=0)
+    rng = np.random.default_rng(7)
+    return {
+        "testbed": tb,
+        "predictor": EnergyTimePredictor(SMALL).fit(X, yp, yt),
+        "features": {a.name: profile_features(a, tb, rng=rng)
+                     for a in APPS},
+    }
+
+
+def _service() -> PredictionService:
+    f = _fixture()
+    return PredictionService(V5E_DVFS, predictor=f["predictor"],
+                             app_features=f["features"],
+                             testbed=f["testbed"])
+
+
+@functools.lru_cache(maxsize=None)
+def _shared_service(pool_idx: int) -> PredictionService:
+    """One memoized service per pool shape — table caches shared across
+    the whole grid so every identity case races decisions, not builds."""
+    return _service()
+
+
+def _jobs(pool_idx: int, seed: int, n: int = 40, quantum: float = 0.0):
+    f = _fixture()
+    _, pool, n_dev = _POOLS[pool_idx]
+    if pool is None:
+        jobs = list(stream_workload(APPS, f["testbed"], n_jobs=n,
+                                    seed=seed, n_devices=n_dev))
+    else:
+        jobs = list(heterogeneous_workload(APPS, f["testbed"], pool,
+                                           n_jobs=n, seed=seed))
+    if quantum:
+        jobs = [dataclasses.replace(j, checkpoint_quantum=quantum)
+                for j in jobs]
+    return jobs
+
+
+@functools.lru_cache(maxsize=None)
+def _cap_w(pool_idx: int) -> float:
+    """A binding cluster cap: idle floor + 50% of the pool's aggregate
+    worst-app max-clock sprint headroom."""
+    f = _fixture()
+    tb = f["testbed"]
+    _, pool, n_dev = _POOLS[pool_idx]
+    classes = pool if pool is not None else [None] * n_dev
+    floor = sprint = 0.0
+    for cls in classes:
+        d = tb.dvfs if cls is None else cls.dvfs
+        floor += tb.idle_power() if cls is None else cls.idle_power()
+        sprint += max(tb.true_power(a, d.max_clock,
+                                    dvfs=None if cls is None else d)
+                      for a in APPS)
+    return floor + 0.5 * (sprint - floor)
+
+
+def _run(jobs, pool_idx: int, policy: str, cap: bool, preempt, batch: bool):
+    f = _fixture()
+    _, pool, n_dev = _POOLS[pool_idx]
+    coord = (PowerCapCoordinator(_cap_w(pool_idx),
+                                 grant_policy="greedy-edf")
+             if cap else None)
+    return run_schedule(
+        jobs, policy, f["testbed"], service=_shared_service(pool_idx),
+        n_devices=n_dev, device_classes=pool, power_coordinator=coord,
+        preemption=preempt, batch_decide=batch)
+
+
+def _assert_identical(a, b):
+    assert len(a.records) == len(b.records)
+    for i, (ra, rb) in enumerate(zip(a.records, b.records)):
+        assert ra == rb, (i, ra, rb)
+
+
+# ---------------------------------------------------------------------- #
+#  Engine identity: batched records == scalar-oracle records
+# ---------------------------------------------------------------------- #
+class TestBatchedEngineIdentity:
+    @pytest.mark.parametrize("policy", POLICY_NAMES)
+    @pytest.mark.parametrize("pool_idx", range(len(_POOLS)),
+                             ids=[p[0] for p in _POOLS])
+    def test_acceptance_grid(self, policy, pool_idx):
+        """The full grid: every policy × both pools × {capless, binding
+        cap} × preemption {absent, disabled, armed} — the batched engine's
+        records are bit-identical to the scalar oracle's (same floats,
+        same RNG stream, same dispatch order, compare= fields included)."""
+        for cap in (False, True):
+            for pmode in ("none", "off", "armed"):
+                quantum = 0.0 if pmode == "none" else 0.3
+                jobs = _jobs(pool_idx, seed=3, quantum=quantum)
+                mk = {"none": lambda: None,
+                      "off": lambda: PreemptionManager(_OFF),
+                      "armed": lambda: PreemptionManager(_ARMED)}[pmode]
+                a = _run(jobs, pool_idx, policy, cap, mk(), batch=False)
+                b = _run(jobs, pool_idx, policy, cap, mk(), batch=True)
+                _assert_identical(a, b)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 50),
+           pool_idx=st.integers(0, len(_POOLS) - 1),
+           policy=st.sampled_from(list(POLICY_NAMES)),
+           cap=st.sampled_from([False, True]),
+           quantum=st.floats(0.05, 1.5))
+    def test_sampled_streams(self, seed, pool_idx, policy, cap, quantum):
+        """Random (seed, pool, policy, cap, quantum) draws: identity holds
+        off the fixed acceptance seeds too."""
+        jobs = _jobs(pool_idx, seed=seed, quantum=quantum)
+        a = _run(jobs, pool_idx, policy, cap, PreemptionManager(_OFF),
+                 batch=False)
+        b = _run(jobs, pool_idx, policy, cap, PreemptionManager(_OFF),
+                 batch=True)
+        _assert_identical(a, b)
+
+    def test_fast_paths_actually_engage(self):
+        """The grid above must not pass vacuously: on the mixed pool the
+        batchable policies take the stacked scorer, d-dvfs takes the
+        per-row ladders, and the measurement cache serves repeat
+        dispatches."""
+        f = _fixture()
+        _, pool, _ = _POOLS[1]
+        svc = _shared_service(1)
+        jobs = _jobs(1, seed=3)
+        for policy, counter in (("min-energy", "batched_joint"),
+                                ("d-dvfs", "ladder_joint")):
+            eng = EventEngine(f["testbed"], policy, service=svc,
+                              device_classes=pool)
+            assert eng.batch_decide and eng._fast_measure
+            eng.run(jobs)
+            st_ = eng.decision_stats
+            assert getattr(st_, counter) > 0, st_.summary()
+            assert st_.measure_hits > 0
+
+    def test_heap_invariant_through_candidate_gather(self):
+        """Satellite: the multi-class gather reuses one scratch list pair
+        across decisions; the free heap must satisfy the heap property
+        after every single decision (losers pushed back, no aliasing
+        between the scratch lists and the heap)."""
+        f = _fixture()
+        _, pool, _ = _POOLS[1]
+        checked = {"n": 0}
+
+        class CheckedEngine(EventEngine):
+            def _decide(self, job, budget, start, dev, orig_free_t, free,
+                        queue, coord, running=None, finalize=None):
+                out = super()._decide(job, budget, start, dev, orig_free_t,
+                                      free, queue, coord, running, finalize)
+                for i in range(len(free)):
+                    for c in (2 * i + 1, 2 * i + 2):
+                        if c < len(free):
+                            assert free[i] <= free[c], (i, c, free)
+                # scratch lists must not alias live heap entries' storage
+                assert self._co_free is not free and self._held is not free
+                checked["n"] += 1
+                return out
+
+        eng = CheckedEngine(f["testbed"], "min-energy",
+                            service=_shared_service(1),
+                            device_classes=pool)
+        res = eng.run(_jobs(1, seed=5))
+        assert checked["n"] == len(res.records) > 0
+
+
+# ---------------------------------------------------------------------- #
+#  Compiled ladders vs the scalar scans
+# ---------------------------------------------------------------------- #
+def _rand_table(seed: int, L: int) -> ClockTable:
+    rng = np.random.default_rng(seed)
+    clocks = tuple(V5E_DVFS.clock_list()[:L])
+    assert len(clocks) == L
+    return ClockTable(clocks=clocks,
+                      P=rng.uniform(20.0, 150.0, L),
+                      T=rng.uniform(0.1, 10.0, L))
+
+
+def _budgets(table: ClockTable):
+    """Budgets hitting every interesting region: below min, every exact
+    threshold, midpoints, above max."""
+    Ts = np.sort(table.T)
+    out = [float(Ts[0]) * 0.5, float(Ts[-1]) * 2.5]
+    out.extend(float(t) for t in Ts)
+    out.extend(float(t) * 1.01 for t in Ts)
+    return out
+
+
+class TestCompiledLadders:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), L=st.integers(1, 64),
+           kind=st.sampled_from(["min-energy", "risk-aware", "oracle",
+                                 "d-dvfs"]))
+    def test_ladder_matches_scalar_scan(self, seed, L, kind):
+        """Property: for random tables (single-clock ladders included) and
+        budgets at/around every threshold, the compiled ladder returns the
+        scalar ``select_clock``'s exact selection — same clock object,
+        same floats."""
+        table = _rand_table(seed, L)
+        policy = resolve_policy(kind, V5E_DVFS)
+        core = DecisionCore()
+        for b in _budgets(table):
+            want = policy.select_clock(None, b, table)
+            got = core.select(policy, None, b, table)
+            assert got == want, (kind, b, got, want)
+
+    def test_plateau_ties_keep_lowest_ladder_index(self):
+        """Voltage-floor plateau: equal energies across the feasible set —
+        both paths must keep the lowest ladder index (np.argmin's
+        first-occurrence rule)."""
+        clocks = tuple(V5E_DVFS.clock_list()[:4])
+        table = ClockTable(clocks=clocks,
+                           P=np.array([3.0, 4.0, 6.0, 12.0]),
+                           T=np.array([4.0, 3.0, 2.0, 1.0]))  # E == 12 all
+        policy = MinEnergy(V5E_DVFS)
+        core = DecisionCore()
+        for b, want_i in ((4.5, 0), (3.5, 1), (2.5, 2), (1.5, 3)):
+            want = policy.select_clock(None, b, table)
+            got = core.select(policy, None, b, table)
+            assert got == want
+            assert got.clock is clocks[want_i], (b, got)
+
+    def test_ddvfs_first_accept_recurrence(self):
+        """Deterministic d-dvfs case: budget 3 on T=[2, 9, 1.5] accepts
+        i=0 (tightening max_time to 2), rejects i=1 (9 ≥ 2), accepts i=2 —
+        the ladder's precomputed outcome must replay that scan exactly."""
+        clocks = tuple(V5E_DVFS.clock_list()[:3])
+        table = ClockTable(clocks=clocks,
+                           P=np.array([5.0, 3.0, 4.0]),
+                           T=np.array([2.0, 9.0, 1.5]))
+        policy = PaperDDVFS(V5E_DVFS)
+        core = DecisionCore()
+        want = policy.select_clock(None, 3.0, table)
+        got = core.select(policy, None, 3.0, table)
+        assert got == want
+        assert got.clock is clocks[2] and got.time == 1.5
+        # infeasible budget: nothing strictly under it
+        assert core.select(policy, None, 1.5, table).clock is None
+        assert policy.select_clock(None, 1.5, table).clock is None
+
+    def test_ladder_cache_lru_and_stats(self):
+        """Second decision on the same (table, margin) is a cache hit; the
+        LRU bound evicts oldest; a distinct table object builds its own
+        ladder (identity-keyed, never contents-keyed)."""
+        core = DecisionCore(cache_size=4)
+        policy = MinEnergy(V5E_DVFS)
+        t0 = _rand_table(0, 8)
+        core.select(policy, None, 1.0, t0)
+        core.select(policy, None, 2.0, t0)
+        assert core.stats.ladder_builds == 1
+        assert core.stats.ladder_hits == 1
+        twin = ClockTable(clocks=t0.clocks, P=t0.P.copy(), T=t0.T.copy())
+        core.select(policy, None, 1.0, twin)
+        assert core.stats.ladder_builds == 2
+        for s in range(10):
+            core.select(policy, None, 1.0, _rand_table(100 + s, 8))
+        assert len(core._ladders) <= 4
+        # margin is part of the key: RiskAware at two margins = two ladders
+        core2 = DecisionCore()
+        for m in (0.05, 0.2):
+            core2.select(RiskAware(V5E_DVFS, margin=m), None, 1.0, t0)
+        assert core2.stats.ladder_builds == 2
+
+
+# ---------------------------------------------------------------------- #
+#  Batched joint scoring vs the scalar candidate loop
+# ---------------------------------------------------------------------- #
+def _cands(tables):
+    classes = [V5P_CLASS, V5E_CLASS, V5LITE_CLASS]
+    return [DeviceCandidate(classes[i % len(classes)], 0.0, t)
+            for i, t in enumerate(tables)]
+
+
+def _joint_case(policy, tables, budget):
+    cands = [dataclasses.replace(c, budget=budget) for c in _cands(tables)]
+    want = policy.select_device_clock(None, cands)
+    got = policy.batch_scores(None, budget, StackedTable.from_tables(tables))
+    assert got is not None
+    assert got == want, (budget, got, want)
+
+
+class TestBatchScores:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           kind=st.sampled_from(["min-energy", "risk-aware", "oracle"]))
+    def test_matches_scalar_joint_decision(self, seed, kind):
+        """Property: mixed-length candidate ladders (a single-clock ladder
+        stacked against 24- and 64-clock ones) at budgets around every
+        threshold — ``batch_scores`` returns ``select_device_clock``'s
+        exact (index, selection), padding never admitted."""
+        policy = resolve_policy(kind, V5E_DVFS)
+        tables = [_rand_table(seed, 1), _rand_table(seed + 1, 24),
+                  _rand_table(seed + 2, 64)]
+        allT = np.concatenate([t.T for t in tables])
+        budgets = [float(allT.min()) * 0.5, float(allT.max()) * 3.0]
+        budgets.extend(float(t) for t in np.sort(allT)[::5])
+        for b in budgets:
+            _joint_case(policy, tables, b)
+
+    def test_plateau_and_cross_candidate_ties(self):
+        """Equal energies inside a row keep the lowest ladder index; equal
+        best scores across candidates keep the earliest-free (lowest)
+        candidate — the strict-< rule, exactly."""
+        clocks = tuple(V5E_DVFS.clock_list()[:3])
+        ta = ClockTable(clocks=clocks, P=np.array([6.0, 4.0, 3.0]),
+                        T=np.array([2.0, 3.0, 4.0]))       # E == 12 all
+        tb_ = ClockTable(clocks=clocks, P=np.array([12.0, 6.0, 4.0]),
+                         T=np.array([1.0, 2.0, 3.0]))      # E == 12 all
+        policy = MinEnergy(V5E_DVFS)
+        for budget in (5.0, 2.5):
+            _joint_case(policy, [ta, tb_], budget)
+        got = policy.batch_scores(None, 5.0,
+                                  StackedTable.from_tables([ta, tb_]))
+        assert got[0] == 0 and got[1].clock is clocks[0]
+
+    def test_infeasible_everywhere(self):
+        """No feasible clock on any candidate: both paths fall back to the
+        best-min-T candidate with a ClockSelection(None) verdict."""
+        tables = [_rand_table(7, 1), _rand_table(8, 24)]
+        policy = MinEnergy(V5E_DVFS)
+        tiny = 0.5 * min(float(t.T.min()) for t in tables)
+        _joint_case(policy, tables, tiny)
+        got = policy.batch_scores(None, tiny,
+                                  StackedTable.from_tables(tables))
+        assert got[1].clock is None
+
+    def test_non_batchable_policies_opt_out(self):
+        """Scan-order and fixed-clock policies return None — the engine
+        must take the scalar/ladder path, never a silent approximation."""
+        stk = StackedTable.from_tables([_rand_table(0, 8)])
+        for kind in ("d-dvfs", "dc", "mc"):
+            policy = resolve_policy(kind, V5E_DVFS)
+            assert policy.batch_scores(None, 1.0, stk) is None
+
+    def test_padding_shape_and_mask(self):
+        """The stacked view pads with +inf (never feasible) and masks
+        padded slots out of row minima."""
+        stk = StackedTable.from_tables([_rand_table(0, 1),
+                                        _rand_table(1, 64)])
+        assert stk.P.shape == stk.T.shape == stk.mask.shape == (2, 64)
+        assert stk.lengths == (1, 64)
+        assert np.isinf(stk.T[0, 1:]).all() and np.isinf(stk.P[0, 1:]).all()
+        assert not stk.mask[0, 1:].any() and stk.mask[1].all()
+
+
+# ---------------------------------------------------------------------- #
+#  Service substrate: stacked cache, prefetch, kernel knob
+# ---------------------------------------------------------------------- #
+class _NudgeCorrector:
+    def correct(self, name, clocks, P, T):
+        return P * 1.01, T
+
+
+class TestServiceSubstrate:
+    def test_stacked_cache_identity_and_epoch(self):
+        svc = _service()
+        classes = (V5P_CLASS, V5E_CLASS)
+        name = APPS[0].name
+        s1 = svc.stacked_tables(name, classes)
+        s2 = svc.stacked_tables(name, classes)
+        assert s1 is s2
+        assert svc.stats.stacked_builds == 1
+        assert svc.stats.stacked_hits == 1
+        # rows are the very objects per-app decisions would fetch
+        for row, cls in zip(s1.tables, classes):
+            assert row is svc.table(name, cls)
+        # corrector attach bumps the epoch: cached views are void
+        svc.attach_corrector(_NudgeCorrector())
+        s3 = svc.stacked_tables(name, classes)
+        assert s3 is not s1 and svc.stats.stacked_builds == 2
+        assert s3.tables[0] is svc.table(name, V5P_CLASS)
+        # targeted invalidation voids again
+        svc.invalidate(name)
+        assert svc.stacked_tables(name, classes) is not s3
+        svc.detach_corrector()
+        s5 = svc.stacked_tables(name, classes)
+        assert np.array_equal(s5.P, s1.P) and np.array_equal(s5.T, s1.T)
+
+    def test_stacked_cache_lru_bound(self):
+        svc = _service()
+        svc.stacked_cache_size = 3
+        for a in APPS:
+            svc.stacked_tables(a.name, (V5E_CLASS,))
+        assert len(svc._stacked) <= 3
+
+    def test_prefetch_rows_bit_identical_to_lazy(self):
+        """Batched prefetch (one stacked predictor call per class ×
+        regressor) must produce byte-identical tables to one-at-a-time
+        lazy builds — the GBDT is rowwise, so slicing commutes with
+        predicting."""
+        lazy, pre = _service(), _service()
+        names = [a.name for a in APPS]
+        classes = (None, V5LITE_CLASS)
+        built = pre.prefetch_tables(names, classes)
+        assert built == len(names) * len(classes)
+        assert pre.stats.prefetched_tables == built
+        for cls in classes:
+            for n in names:
+                a, b = lazy.table(n, cls), pre.table(n, cls)
+                assert np.array_equal(a.P, b.P), (n, cls)
+                assert np.array_equal(a.T, b.T), (n, cls)
+                assert a.clocks == b.clocks
+        # a second prefetch finds nothing missing
+        assert pre.prefetch_tables(names, classes) == 0
+
+    def test_kernel_min_rows_env_override(self, monkeypatch):
+        monkeypatch.delenv(KERNEL_MIN_ROWS_ENV, raising=False)
+        assert kernel_min_rows_default() == DEFAULT_KERNEL_MIN_ROWS
+        monkeypatch.setenv(KERNEL_MIN_ROWS_ENV, "7")
+        assert kernel_min_rows_default() == 7
+        monkeypatch.setenv(KERNEL_MIN_ROWS_ENV, "not-a-number")
+        assert kernel_min_rows_default() == DEFAULT_KERNEL_MIN_ROWS
+        svc = PredictionService(V5E_DVFS)
+        assert svc.kernel_min_rows == DEFAULT_KERNEL_MIN_ROWS
+
+
+# ---------------------------------------------------------------------- #
+#  Cached measurement substrate
+# ---------------------------------------------------------------------- #
+class TestMeasureCache:
+    def test_measure_bit_identical_to_testbed_run(self):
+        """Same rng state in, same Measurement out — including repeat
+        (app, clock) pairs served from the truth cache (the noise draws
+        still advance the stream identically)."""
+        f = _fixture()
+        tb = f["testbed"]
+        core = DecisionCore()
+        clocks = tb.dvfs.clock_list()
+        seq = [(APPS[i % len(APPS)], clocks[(i * 7) % 5])
+               for i in range(40)]  # (app, clock) pairs recur past i=30
+        r1, r2 = np.random.default_rng(11), np.random.default_rng(11)
+        for app, clock in seq:
+            want = tb.run(app, clock, rng=r1)
+            got = core.measure(tb, app, clock, r2)
+            assert isinstance(got, Measurement)
+            assert got == want, (app.name, clock)
+        assert core.stats.measure_hits > 0
+        assert core.stats.measure_builds <= len(APPS) * len(clocks)
+        # per-class dvfs keys separately
+        got = core.measure(tb, APPS[0], V5LITE_CLASS.dvfs.clock_list()[0],
+                           np.random.default_rng(1),
+                           dvfs=V5LITE_CLASS.dvfs)
+        want = tb.run(APPS[0], V5LITE_CLASS.dvfs.clock_list()[0],
+                      rng=np.random.default_rng(1), dvfs=V5LITE_CLASS.dvfs)
+        assert got == want
+
+    def test_fast_measure_gate_rejects_subclassed_physics(self):
+        f = _fixture()
+        assert DecisionCore.fast_measure_safe(f["testbed"])
+
+        class WarpedTestbed(Testbed):
+            def true_time(self, app, clock, dvfs=None):
+                return super().true_time(app, clock, dvfs=dvfs) * 2
+
+        assert not DecisionCore.fast_measure_safe(WarpedTestbed(seed=0))
+        f2 = _fixture()
+        eng = EventEngine(WarpedTestbed(seed=0), "min-energy",
+                          service=_service())
+        assert not eng._fast_measure
