@@ -45,6 +45,9 @@ BENCHES = [
     ("decide", "benchmarks.bench_decide",
      "Vectorized decision core: scalar vs batched dispatch throughput, "
      "100k-job / 8-device streams"),
+    ("tenants", "benchmarks.bench_tenants",
+     "Beyond paper: multi-tenant SLA tiers — overload admission control, "
+     "SLO isolation at 10x overload, weighted power shares"),
     ("kernels", "benchmarks.bench_kernels",
      "Kernel micro-benchmarks"),
     ("roofline", "benchmarks.bench_roofline",

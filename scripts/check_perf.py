@@ -15,7 +15,11 @@ gate fails when:
 * the *committed baseline* lacks a full-scale section or its uniform
   full-scale speedup is below the acceptance floor (>= 3x) — so the
   baseline itself cannot quietly regress below the PR's acceptance
-  criterion.
+  criterion;
+* either run lacks a required smoke scenario — scenario coverage is an
+  explicit contract, so dropping e.g. the tenant stream from the bench
+  (or shipping a stale baseline without it) fails loudly instead of
+  silently shrinking the gate.
 
 Usage::
 
@@ -31,6 +35,9 @@ import sys
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 FULL_UNIFORM_FLOOR = 3.0
+# every smoke section — baseline and current — must cover these streams
+REQUIRED_SMOKE = ("uniform", "uniform_cap", "hetero", "hetero_cap",
+                  "tenant")
 
 
 def load(path: pathlib.Path) -> dict:
@@ -70,16 +77,27 @@ def main() -> int:
             if not row.get("identical", False):
                 failures.append(f"baseline full:{name} identical=false")
 
-    # 2) the current run must match the scalar oracle everywhere
+    # 2) scenario coverage: both runs must carry every required stream
     cur_smoke = current.get("smoke", {})
+    base_smoke = baseline.get("smoke", {})
+    for name in REQUIRED_SMOKE:
+        for label, smoke, fix in (
+                ("baseline", base_smoke,
+                 "regenerate with: python -m benchmarks.bench_decide"),
+                ("current", cur_smoke,
+                 "the bench dropped a required scenario")):
+            if name not in smoke:
+                failures.append(
+                    f"{label} run is missing required smoke:{name} — {fix}")
+
+    # 3) the current run must match the scalar oracle everywhere
     for name, row in cur_smoke.items():
         if not row.get("identical", False):
             failures.append(
                 f"current smoke:{name} diverged from the scalar oracle "
                 "(identical=false)")
 
-    # 3) smoke-vs-smoke speedup regression, with tolerance
-    base_smoke = baseline.get("smoke", {})
+    # 4) smoke-vs-smoke speedup regression, with tolerance
     for name, brow in sorted(base_smoke.items()):
         crow = cur_smoke.get(name)
         if crow is None:

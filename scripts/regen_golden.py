@@ -40,7 +40,19 @@ def main() -> None:
                         "seed-0 workload with checkpoint_quantum="
                         f"{test_golden.PRE_DECLINE_QUANTUM}, default "
                         "PreemptionManager (every trigger declines — "
-                        "trace == 'min-energy|0')",
+                        "trace == 'min-energy|0'); plus "
+                        f"{test_golden.TEN_SHED_KEY!r}: "
+                        f"{test_golden.TEN_SHED_JOBS}-job "
+                        "multi_tenant_workload(seed=0, overload="
+                        f"{test_golden.TEN_SHED_OVERLOAD:.0f}), "
+                        f"min-energy, {test_golden.TEN_SHED_DEVICES} "
+                        "devices, AdmissionController(lookahead_s="
+                        f"{test_golden.TEN_SHED_LOOKAHEAD:.0f}, threshold="
+                        f"{test_golden.TEN_SHED_THRESHOLD}) (best-effort "
+                        f"work shed) and {test_golden.TEN_RESCUE_KEY!r}: "
+                        "hand-built doomed best-effort whale + 2 SLO "
+                        "shorts, 1 device, default PreemptionManager "
+                        "(tier rescue fires on a later-deadline SLO head)",
             "regen": "PYTHONPATH=src python scripts/regen_golden.py",
             "columns": list(test_golden._COLUMNS),
         },

@@ -12,10 +12,13 @@ from .features import (ALL_INPUT_NAMES, CATEGORICAL_FEATURES, FEATURE_NAMES,
 from .predictor import (EnergyTimePredictor, PredictorConfig, loocv_rmse,
                         normalized_rmse)
 from .correlate import CorrelationIndex
-from .workload import (Job, cap_stress_workload, drift_profile,
-                       drifting_workload, heterogeneous_workload,
-                       make_device_pool, make_workload,
+from .workload import (BATCH_TIER, BEST_EFFORT_TIER, DEFAULT_TIER, Job,
+                       SLO_TIER, TIERS, TierSpec, cap_stress_workload,
+                       drift_profile, drifting_workload, edf_key,
+                       heterogeneous_workload, make_device_pool,
+                       make_workload, multi_tenant_workload,
                        rescue_stress_workload, stream_workload)
+from .admission import AdmissionController, AdmissionStats
 from .prediction_service import (ClockTable, PredictionService, ServiceStats,
                                  StackedTable, kernel_min_rows_default)
 from .batch_decide import DecisionCore, DecisionStats
@@ -55,4 +58,7 @@ __all__ = [
     "PowerSegment", "PowerTelemetry",
     "PreemptionConfig", "PreemptionManager", "PreemptionStats",
     "rescue_stress_workload",
+    "TierSpec", "SLO_TIER", "BATCH_TIER", "BEST_EFFORT_TIER", "DEFAULT_TIER",
+    "TIERS", "edf_key", "multi_tenant_workload",
+    "AdmissionController", "AdmissionStats",
 ]

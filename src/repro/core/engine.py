@@ -82,6 +82,16 @@ Invariants:
   emitted in dispatch order, Σ ``work_frac`` per job is exactly 1, and
   each record's energy decomposes into duration × draw + explicit
   checkpoint/restore joules; see :mod:`repro.core.preemption`.
+* **Tier & admission identity (PR 7).** The EDF queue orders by
+  :func:`~repro.core.workload.edf_key` — ``(-tier.priority, deadline)`` —
+  so higher tiers dispatch strictly first; with every job in a single
+  tier (any tier) the leading component is constant and ordering reduces
+  to plain deadline EDF, bit-identically. ``admission=None`` (the
+  default) runs zero admission code; an attached
+  :class:`~repro.core.admission.AdmissionController` over a stream with
+  no sheddable jobs admits everything and is likewise bit-identical.
+  When it does fire, every arrival is conserved — executed or listed in
+  ``ScheduleResult.shed``, never silently dropped.
 """
 from __future__ import annotations
 
@@ -97,7 +107,7 @@ from .policies import (BudgetManager, DeviceCandidate, Policy,
                        resolve_policy)
 from .prediction_service import PredictionService, StackedTable
 from .simulator import Testbed
-from .workload import Job
+from .workload import Job, edf_key
 
 __all__ = ["ExecutionRecord", "ScheduleResult", "EngineHooks", "EventEngine"]
 
@@ -157,12 +167,23 @@ class ExecutionRecord:
                                                    compare=False)
     overhead_s: float = dataclasses.field(default=0.0, compare=False)
     overhead_j: float = dataclasses.field(default=0.0, compare=False)
+    #: SLA-tier provenance (PR 7): the dispatched job's tier name
+    #: ("default" for untagged jobs, None only on the legacy monolith).
+    #: compare=False like every provenance field — a single-tier run
+    #: stays ``==``-identical to the tierless engine regardless of which
+    #: tier label the jobs carry.
+    tier: str | None = dataclasses.field(default=None, compare=False)
 
 
 @dataclasses.dataclass
 class ScheduleResult:
     policy: str
     records: list[ExecutionRecord]
+    #: Jobs an :class:`~repro.core.admission.AdmissionController` shed
+    #: before dispatch (PR 7). Shed work consumed no energy, produced no
+    #: record, and is *not* counted in :attr:`misses` — it is accounted
+    #: here explicitly instead. Empty on every admission-free run.
+    shed: list[Job] = dataclasses.field(default_factory=list)
 
     @property
     def total_energy(self) -> float:
@@ -180,6 +201,21 @@ class ScheduleResult:
     @property
     def preemptions(self) -> int:
         return sum(r.preempted for r in self.records)
+
+    @property
+    def shed_count(self) -> int:
+        return len(self.shed)
+
+    def misses_by_tier(self) -> dict[str, int]:
+        """Per-tier deadline misses over final (non-preempted) records —
+        the SLO-isolation metric. Shed jobs are excluded by construction
+        (they have no record); report them via :attr:`shed`."""
+        out: dict[str, int] = {}
+        for r in self.records:
+            if not r.preempted and not r.met_deadline:
+                key = r.tier or "default"
+                out[key] = out.get(key, 0) + 1
+        return out
 
     def final_records(self) -> list[ExecutionRecord]:
         """One record per job: the segment that ran to completion."""
@@ -291,6 +327,7 @@ class EventEngine:
         power_coordinator: Optional[object] = None,
         preemption: Optional[object] = None,
         batch_decide: bool = True,
+        admission: Optional[object] = None,
     ):
         self.testbed = testbed
         self.policy = resolve_policy(policy, testbed.dvfs)
@@ -326,6 +363,12 @@ class EventEngine:
         #: remaining work re-enters the EDF queue as a resumable remnant.
         #: None (default) runs the untouched non-preemptive loop.
         self.preemption = preemption
+        #: Optional :class:`~repro.core.admission.AdmissionController`
+        #: (PR 7): consulted for every arrival before it enters the EDF
+        #: queue; sheddable-tier work may be deferred or shed under
+        #: predicted overload. None (default) runs zero admission code —
+        #: bit-identical to the plain engine.
+        self.admission = admission
         self.device_clocks: dict[int, Optional[ClockPair]] = {}
         if self.policy.table_kind != "none" and service is None:
             raise ValueError(
@@ -671,6 +714,9 @@ class EventEngine:
         if coord is not None:
             coord.reset(self._idle_powers(), t_min_fn=self._coord_t_min_fn(),
                         device_classes=self.device_classes)
+        adm = self.admission
+        if adm is not None:
+            adm.reset(self)
         self.device_clocks = {dev: None for dev in range(self.n_devices)}
 
         # free-heap entries are always (free_time, device_index) — the
@@ -679,7 +725,9 @@ class EventEngine:
         # class object: total order, deterministic in construction order
         free = [(0.0, dev) for dev in range(self.n_devices)]
         heapq.heapify(free)
-        queue: list[tuple[float, int, Job]] = []   # (deadline, tiebreak, job)
+        # (edf_key, tiebreak, job): tier-priority-then-deadline order —
+        # reduces to plain EDF whenever every job shares one tier
+        queue: list[tuple[tuple, int, Job]] = []
         counter = 0
         records: list[ExecutionRecord] = []
         # completions whose simulated end time has not been reached yet —
@@ -689,7 +737,19 @@ class EventEngine:
         fb_pending: list[tuple[float, int, ExecutionRecord]] = []
         fb_seq = 0
 
-        while not stream.exhausted or queue:
+        def enqueue(j: Job, upto: float) -> None:
+            nonlocal counter
+            heapq.heappush(queue, (edf_key(j), counter, j))
+            counter += 1
+            if self._prefetch:
+                self._admitted.append(j.name)
+            for bm in self.budget_managers:
+                bm.on_admit(j)
+            if self.hooks.on_admit:
+                self.hooks.on_admit(j, upto)
+
+        while not stream.exhausted or queue or (
+                adm is not None and adm.n_deferred):
             free_t, dev = heapq.heappop(free)
             # the device's true free time — free_t may be bumped to the
             # next arrival below, and a device that loses the joint
@@ -698,19 +758,25 @@ class EventEngine:
             # admit everything that has arrived by the time this device
             # frees up; if the queue is empty, jump to the next arrival
             if not queue:
-                if stream.exhausted:
-                    break
-                free_t = max(free_t, stream.peek_arrival())
+                if adm is not None and adm.n_deferred:
+                    # queue drained: parked work gets a release check at
+                    # the device's true free time (forced once the
+                    # stream is also done — deferral never strands work)
+                    for j in adm.release(free_t, queue,
+                                         force=stream.exhausted):
+                        enqueue(j, free_t)
+                if not queue:
+                    if stream.exhausted:
+                        break
+                    free_t = max(free_t, stream.peek_arrival())
             while not stream.exhausted and stream.peek_arrival() <= free_t:
                 job = stream.pop()
-                heapq.heappush(queue, (job.deadline, counter, job))
-                counter += 1
-                if self._prefetch:
-                    self._admitted.append(job.name)
-                for bm in self.budget_managers:
-                    bm.on_admit(job)
-                if self.hooks.on_admit:
-                    self.hooks.on_admit(job, free_t)
+                if adm is not None and not adm.check(job, free_t, queue):
+                    continue              # shed or parked — never queued
+                enqueue(job, free_t)
+            if adm is not None and adm.n_deferred:
+                for j in adm.release(free_t, queue):
+                    enqueue(j, free_t)
             if self._admitted:
                 # batched ladder prefetch: every missing (app, class) table
                 # for this admission wave in one stacked predictor call —
@@ -784,6 +850,7 @@ class EventEngine:
                 device_class=(None if chosen_class is None
                               else chosen_class.name),
                 power_peak_w=None if coord is None else meas.power_w,
+                tier=job.tier.name,
             )
             if coord is not None:
                 # the coordinator fills rec.power_grant_w and keeps it in
@@ -802,7 +869,9 @@ class EventEngine:
 
         while fb_pending:                  # stream drained: flush the rest
             self.feedback.observe(heapq.heappop(fb_pending)[2])
-        return ScheduleResult(policy=self.policy.name, records=records)
+        return ScheduleResult(
+            policy=self.policy.name, records=records,
+            shed=[] if adm is None else list(adm.shed_jobs))
 
     # ------------------------------------------------------------------ #
     #  Preemptive (segmented) event loop — PR 5
@@ -839,11 +908,14 @@ class EventEngine:
             coord.reset(self._idle_powers(), t_min_fn=self._coord_t_min_fn(),
                         device_classes=self.device_classes)
         pre.reset()
+        adm = self.admission
+        if adm is not None:
+            adm.reset(self)
         self.device_clocks = {dev: None for dev in range(self.n_devices)}
 
         free = [(0.0, dev) for dev in range(self.n_devices)]
         heapq.heapify(free)
-        queue: list[tuple[float, int, Job]] = []
+        queue: list[tuple[tuple, int, Job]] = []
         counter = 0
         records: list[ExecutionRecord] = []
         fb_pending: list[tuple[float, int, ExecutionRecord]] = []
@@ -853,18 +925,29 @@ class EventEngine:
         # the moment a preemption re-fills the queue with a remnant
         parked: list[int] = []
 
-        def admit(upto: float) -> None:
+        def enqueue(j: Job, upto: float) -> None:
             nonlocal counter
+            heapq.heappush(queue, (edf_key(j), counter, j))
+            counter += 1
+            if self._prefetch:
+                self._admitted.append(j.name)
+            for bm in self.budget_managers:
+                bm.on_admit(j)
+            if self.hooks.on_admit:
+                self.hooks.on_admit(j, upto)
+
+        def admit(upto: float, force_release: bool = False) -> None:
             while not stream.exhausted and stream.peek_arrival() <= upto:
                 j = stream.pop()
-                heapq.heappush(queue, (j.deadline, counter, j))
-                counter += 1
-                if self._prefetch:
-                    self._admitted.append(j.name)
-                for bm in self.budget_managers:
-                    bm.on_admit(j)
-                if self.hooks.on_admit:
-                    self.hooks.on_admit(j, upto)
+                if adm is not None and not adm.check(j, upto, queue):
+                    continue              # shed or parked — never queued
+                enqueue(j, upto)
+            if adm is not None and adm.n_deferred:
+                for j in adm.release(upto, queue, force=force_release):
+                    enqueue(j, upto)
+                if queue and parked:      # released work exists again
+                    while parked:
+                        heapq.heappush(free, (upto, parked.pop()))
             if self._admitted:
                 self.service.prefetch_tables(self._admitted,
                                              self._prefetch_classes)
@@ -893,7 +976,8 @@ class EventEngine:
             while fb_pending and fb_pending[0][0] <= t + 1e-12:
                 self.feedback.observe(heapq.heappop(fb_pending)[2])
 
-        while not stream.exhausted or queue or running:
+        while not stream.exhausted or queue or running or (
+                adm is not None and adm.n_deferred):
             free_t, dev = heapq.heappop(free)
             seg = running.get(dev)
             if seg is not None:
@@ -938,7 +1022,7 @@ class EventEngine:
                         segment=seg.job.segment + 1)
                     pre.note_preempt(remnant, seg)
                     heapq.heappush(queue,
-                                   (remnant.deadline, counter, remnant))
+                                   (edf_key(remnant), counter, remnant))
                     counter += 1
                     for bm in self.budget_managers:
                         bm.on_admit(remnant)
@@ -967,11 +1051,17 @@ class EventEngine:
             orig_free_t = free_t
             if not queue:
                 if stream.exhausted:
-                    if running:
-                        parked.append(dev)
-                        continue
-                    break
-                free_t = max(free_t, stream.peek_arrival())
+                    if adm is not None and adm.n_deferred and not running:
+                        # pool drained: force-drain parked work (shed the
+                        # doomed, admit the rest — never strand a job)
+                        admit(free_t, force_release=True)
+                    if not queue:
+                        if running:
+                            parked.append(dev)
+                            continue
+                        break
+                else:
+                    free_t = max(free_t, stream.peek_arrival())
             admit(free_t)
             if not queue:
                 heapq.heappush(free, (free_t, dev))
@@ -1030,6 +1120,7 @@ class EventEngine:
                 power_peak_w=None if coord is None else meas.power_w,
                 work_frac=job.work_frac, segment=job.segment,
                 overhead_s=restore_s, overhead_j=restore_j,
+                tier=job.tier.name,
             )
             if coord is not None:
                 coord.commit(
@@ -1060,4 +1151,6 @@ class EventEngine:
             finalize(seg)
         while fb_pending:
             self.feedback.observe(heapq.heappop(fb_pending)[2])
-        return ScheduleResult(policy=self.policy.name, records=records)
+        return ScheduleResult(
+            policy=self.policy.name, records=records,
+            shed=[] if adm is None else list(adm.shed_jobs))

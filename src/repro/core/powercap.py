@@ -478,7 +478,12 @@ class PowerCapCoordinator:
                    else None)
             t_min = float(self._t_min(job, cls))
         slack = job.deadline - start - t_min
-        return 1.0 / max(slack, self.slack_eps)
+        # weighted tier fairness (PR 7): a tier's share of contended
+        # headroom tracks its weight. Stock weights are powers of two, so
+        # an all-one-tier queue's weight factor cancels exactly in the
+        # w0/(w0+others) share — single-tier runs keep bit-identical
+        # shares (the default tier's 1.0 trivially so).
+        return job.tier.weight / max(slack, self.slack_eps)
 
     def next_release(self, t: float) -> Optional[float]:
         """Earliest time strictly after ``t`` at which a running grant
@@ -506,9 +511,15 @@ class PowerCapCoordinator:
         """Max total watts device ``dev`` may assume for this dispatch.
 
         ``queue`` is the engine's pending EDF queue (entries
-        ``(deadline, seq, job)``), read-only — only ``slack-weighted``
-        consults it. The offered grant always satisfies
-        ``idle ≤ offer ≤ idle + headroom``."""
+        ``(key, seq, job)``), read-only — only ``slack-weighted``
+        consults it (jobs only; the key shape is the engine's business).
+        The offered grant always satisfies ``idle ≤ offer ≤ idle +
+        headroom``. Under ``slack-weighted``, each competitor's urgency
+        is scaled by its :class:`~repro.core.workload.TierSpec` weight,
+        so under contention a tier's granted share of headroom tracks
+        its weight, and any share a tier does not contend for
+        redistributes to the others (the share is over *present*
+        competitors only)."""
         self.stats.offers += 1
         idle_d = self._idle[dev]
         if not math.isfinite(self.cap_w):

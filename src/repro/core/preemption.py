@@ -67,7 +67,7 @@ from typing import Optional
 import numpy as np
 
 from .prediction_service import ClockTable
-from .workload import Job
+from .workload import Job, edf_key
 
 __all__ = ["PreemptionConfig", "PreemptionStats", "PreemptionManager"]
 
@@ -117,6 +117,9 @@ class PreemptionStats:
     preemptions: int = 0        # segments actually truncated
     self_rescues: int = 0       # preemptions fired by the job's own miss
     queue_rescues: int = 0      # preemptions fired for a stranded queue job
+    tier_rescues: int = 0       # queue rescues where the head's SLA tier
+    #                             outranked the victim's (PR 7 — counted
+    #                             inside queue_rescues, not in addition)
     cap_rescues: int = 0        # self-rescues needing a bigger power grant
     migrations: int = 0         # resumes that landed on a different class
     resumes: int = 0            # remnant segments dispatched
@@ -126,7 +129,8 @@ class PreemptionStats:
     def summary(self) -> str:
         return (f"boundaries={self.boundaries} checks={self.checks} "
                 f"preempt={self.preemptions} (self={self.self_rescues} "
-                f"queue={self.queue_rescues} cap={self.cap_rescues}) "
+                f"queue={self.queue_rescues} [tier={self.tier_rescues}] "
+                f"cap={self.cap_rescues}) "
                 f"declined={self.declined} resumes={self.resumes} "
                 f"migrations={self.migrations} "
                 f"overhead={self.overhead_s:.2f}s/{self.overhead_j:.0f}J")
@@ -279,11 +283,14 @@ class PreemptionManager:
             t_head = (engine._t_min_est(head, seg.device_class)
                       if head is not None else None)
             # the rescued head must also outrank the would-be remnant
-            # under the EDF key (the remnant re-enters with the victim's
-            # deadline and a fresh, larger counter — ties go to the
-            # head): otherwise the freed device would just pop the
-            # remnant again and the checkpoint bought nothing
-            if head is not None and head.deadline > job.deadline:
+            # under the dispatch key (the remnant re-enters with the
+            # victim's tier + deadline and a fresh, larger counter — ties
+            # go to the head): otherwise the freed device would just pop
+            # the remnant again and the checkpoint bought nothing. The
+            # key is tier-aware (PR 7): an urgent SLO head outranks a
+            # best-effort victim even with a *later* absolute deadline —
+            # within one tier this is exactly the old deadline test.
+            if head is not None and edf_key(head) > edf_key(job):
                 head, t_head = None, None
             if t_head is not None:
                 t_head = self.scale_t(head, t_head)
@@ -311,6 +318,8 @@ class PreemptionManager:
                                     > job.deadline + 1e-12)
                         if victim_ok or victim_doomed:
                             self.stats.queue_rescues += 1
+                            if head.tier.priority > job.tier.priority:
+                                self.stats.tier_rescues += 1
                             return "queue-rescue"
 
         self.stats.declined += 1

@@ -118,6 +118,7 @@ def run_schedule(
     power_coordinator: object | None = None,
     preemption: object | None = None,
     batch_decide: bool = True,
+    admission: object | None = None,
 ) -> ScheduleResult:
     """Event-driven schedule execution on the simulated testbed.
 
@@ -164,6 +165,13 @@ def run_schedule(
     measurement substrate, all bit-identical to the scalar decision path
     (the default). ``False`` runs the original scalar code — the
     bit-identity oracle ``benchmarks/bench_decide.py`` measures against.
+
+    ``admission``: an :class:`~repro.core.admission.AdmissionController`
+    (PR 7) — sheddable-tier (best-effort) arrivals are deferred or shed
+    when predicted demand overruns the pool/cap headroom over a
+    lookahead window; shed jobs land in ``ScheduleResult.shed``.
+    ``None`` (default) runs zero admission code — bit-identical to the
+    plain engine.
     """
     if isinstance(policy, Policy):
         pol, policy = policy, policy.name
@@ -232,6 +240,7 @@ def run_schedule(
         power_coordinator=power_coordinator,
         preemption=preemption,
         batch_decide=batch_decide,
+        admission=admission,
     )
     return engine.run(jobs)
 

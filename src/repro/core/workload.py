@@ -24,9 +24,56 @@ import numpy as np
 from .dvfs import DeviceClass, DVFSConfig
 from .simulator import AppProfile, Testbed
 
-__all__ = ["Job", "make_workload", "stream_workload", "drifting_workload",
-           "drift_profile", "make_device_pool", "heterogeneous_workload",
-           "cap_stress_workload", "rescue_stress_workload"]
+__all__ = ["Job", "TierSpec", "SLO_TIER", "BATCH_TIER", "BEST_EFFORT_TIER",
+           "DEFAULT_TIER", "TIERS", "edf_key", "make_workload",
+           "stream_workload", "drifting_workload", "drift_profile",
+           "make_device_pool", "heterogeneous_workload",
+           "cap_stress_workload", "rescue_stress_workload",
+           "multi_tenant_workload"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """A tenancy class (SLA tier) a :class:`Job` belongs to.
+
+    ``priority`` orders tiers in the engine's dispatch queue (higher
+    dispatches first — see :func:`edf_key`); ``weight`` scales the tier's
+    slack-weighted share of cap headroom in the
+    :class:`~repro.core.powercap.PowerCapCoordinator`; ``sheddable``
+    marks work an :class:`~repro.core.admission.AdmissionController` may
+    defer or shed under predicted overload; ``slack_range`` is the
+    tier's deadline-slack draw (multiples of the app's default-clock
+    time) used by :func:`multi_tenant_workload`.
+
+    The module-level :data:`DEFAULT_TIER` (priority 0, weight 1.0, not
+    sheddable) is the inert default: every pre-tier code path sees
+    ``-priority == 0`` and ``weight == 1.0``, so single-tier runs stay
+    bit-identical to the tierless engine.
+    """
+    name: str
+    priority: int = 0
+    weight: float = 1.0
+    sheddable: bool = False
+    slack_range: tuple[float, float] = (0.25, 1.0)
+
+
+#: Latency-SLO inference traffic: dispatches first, largest cap share,
+#: never shed, tight arrival-anchored deadlines.
+SLO_TIER = TierSpec("slo", priority=2, weight=4.0, sheddable=False,
+                    slack_range=(0.25, 1.0))
+#: Deadline-driven batch: above best-effort, below SLO; never shed.
+BATCH_TIER = TierSpec("batch", priority=1, weight=2.0, sheddable=False,
+                      slack_range=(2.0, 6.0))
+#: Backfill: lowest priority and weight, the only tier admission control
+#: is allowed to defer or shed.
+BEST_EFFORT_TIER = TierSpec("best-effort", priority=0, weight=1.0,
+                            sheddable=True, slack_range=(6.0, 16.0))
+#: The inert tier every untagged job carries (tierless semantics).
+DEFAULT_TIER = TierSpec("default")
+
+TIERS: dict[str, TierSpec] = {
+    t.name: t for t in (SLO_TIER, BATCH_TIER, BEST_EFFORT_TIER, DEFAULT_TIER)
+}
 
 
 @dataclasses.dataclass
@@ -47,10 +94,27 @@ class Job:
     #: fractions per job is exactly 1 (conservation invariant).
     work_frac: float = 1.0
     segment: int = 0
+    #: SLA tier this job belongs to. The default tier has priority 0 /
+    #: weight 1.0 / not sheddable, so untagged workloads keep tierless
+    #: semantics bit-exactly. Remnant re-enqueue (``dataclasses.replace``)
+    #: carries the tier automatically.
+    tier: TierSpec = DEFAULT_TIER
 
     @property
     def name(self) -> str:
         return self.app.name
+
+
+def edf_key(job: Job) -> tuple[int, float]:
+    """Tier-aware EDF dispatch key: ``(-tier.priority, deadline)``.
+
+    Higher-priority tiers dispatch strictly before lower ones; within a
+    tier, ordering is the classic earliest-deadline-first. When every job
+    carries the same tier (any single tier, not just the default), the
+    leading component is a shared constant and tuple comparison reduces
+    to plain deadline order — which is how single-tier runs stay
+    bit-identical to the tierless engine."""
+    return (-job.tier.priority, job.deadline)
 
 
 def _truncnorm(rng, lo, hi, mu=None, sigma=None, size=None):
@@ -334,6 +398,119 @@ def rescue_stress_workload(
         # burst has drained — stranding stays within the round
         now = (max(now + 1.8 * t_w, burst_end) + serial_s
                + drain_frac * t_w)
+
+
+#: Default tenant mix for :func:`multi_tenant_workload`: a thin stream of
+#: latency-SLO traffic, a moderate batch band, and a flood of best-effort
+#: backfill — so at 10× overload the SLO tier alone still fits inside the
+#: pool's capacity (isolation is achievable) while best-effort supplies
+#: the overload the admission controller must shed.
+DEFAULT_TIER_MIX: tuple[tuple[TierSpec, float], ...] = (
+    (SLO_TIER, 0.10), (BATCH_TIER, 0.15), (BEST_EFFORT_TIER, 0.75),
+)
+
+
+def multi_tenant_workload(
+    apps: list[AppProfile],
+    testbed: Testbed,
+    n_jobs: int = 400,
+    seed: int = 0,
+    n_devices: int = 8,
+    pool: list[DeviceClass] | None = None,
+    overload: float = 1.0,
+    tier_mix: tuple[tuple[TierSpec, float], ...] | None = None,
+    diurnal_amp: float = 0.6,
+    period_s: float | None = None,
+    burst: int = 4,
+    mean_interarrival: float | None = None,
+    quantum_frac: float | None = None,
+):
+    """Diurnal/bursty multi-tenant stream — the SLA-tier stress case.
+
+    Arrivals are a nonhomogeneous Poisson process: the base rate is
+    ``overload`` × the pool's aggregate default-clock throughput
+    (``overload=10`` is the bench's 10×-overload setting), modulated by a
+    sinusoidal diurnal factor ``1 + diurnal_amp·sin(2πt/period_s)`` so
+    load peaks and troughs like production traffic. Each arrival draws a
+    tier from ``tier_mix`` (default :data:`DEFAULT_TIER_MIX`); sheddable
+    (best-effort) arrivals land as **bursts** of ``burst`` simultaneous
+    jobs — the backfill flood pattern admission control exists to absorb.
+
+    Deadlines are **arrival-anchored** per tier — ``arrival +
+    (1 + U[tier.slack_range]) × t_dc`` with ``t_dc`` the app's
+    default-clock time on the *slowest* class in ``pool`` (conservative
+    anchor) — *not* DC-schedule-anchored like :func:`stream_workload`:
+    under sustained overload a virtual-DC anchor diverges with the
+    backlog and every deadline becomes vacuously loose. An SLO job is
+    feasible iff dispatched promptly; a starved one misses — which is
+    exactly the isolation signal the tier machinery must protect.
+
+    ``quantum_frac`` (optional) sets ``checkpoint_quantum`` to that
+    fraction of each job's anchor time, making the stream preemptible
+    for tier-rescue scenarios. A generator in nondecreasing arrival
+    order, like every stream here.
+    """
+    if overload <= 0:
+        raise ValueError("overload must be > 0")
+    if not 0.0 <= diurnal_amp < 1.0:
+        raise ValueError("diurnal_amp must be in [0, 1)")
+    mix = DEFAULT_TIER_MIX if tier_mix is None else tuple(tier_mix)
+    total_p = sum(p for _, p in mix)
+    if total_p <= 0:
+        raise ValueError("tier_mix probabilities must sum to > 0")
+    cum, acc = [], 0.0
+    for _, p in mix:
+        acc += p / total_p
+        cum.append(acc)
+    rng = np.random.default_rng(seed)
+    if pool is None:
+        t_ref = np.array([testbed.true_time(a, testbed.dvfs.default_clock)
+                          for a in apps])
+        n_dev = n_devices
+        rate = n_dev / float(t_ref.mean())
+    else:
+        n_dev = len(pool)
+        t_cls = {}
+        for cls in pool:
+            if cls.name not in t_cls:
+                t_cls[cls.name] = np.array([
+                    testbed.true_time(a, cls.dvfs.default_clock,
+                                      dvfs=cls.dvfs) for a in apps])
+        # conservative per-app anchor: default-clock time on the slowest
+        # class present — a deadline feasible even with a bad placement
+        t_ref = np.max(np.stack(list(t_cls.values())), axis=0)
+        rate = sum(1.0 / float(t_cls[cls.name].mean()) for cls in pool)
+    if mean_interarrival is None:
+        # normalize by expected jobs per draw: a sheddable draw emits a
+        # whole burst, so without this the bursts would silently multiply
+        # the offered load past the requested ``overload`` factor
+        e_jobs = sum((p / total_p) * (burst if t.sheddable and burst > 1
+                                      else 1) for t, p in mix)
+        mean_interarrival = e_jobs / (rate * overload)
+    if period_s is None:
+        period_s = max(n_jobs * mean_interarrival / 3.0,
+                       8.0 * mean_interarrival)
+    now, jid = 0.0, 0
+    while jid < n_jobs:
+        gap = float(rng.exponential(mean_interarrival))
+        mod = 1.0 + diurnal_amp * np.sin(2.0 * np.pi * now / period_s)
+        now += gap / max(float(mod), 1e-9)
+        u = float(rng.random())
+        tier = mix[-1][0]
+        for (t, _), edge in zip(mix, cum):
+            if u <= edge:
+                tier = t
+                break
+        k = burst if (tier.sheddable and burst > 1) else 1
+        for _ in range(min(k, n_jobs - jid)):
+            idx = int(rng.integers(len(apps)))
+            t_a = float(t_ref[idx])
+            slack = 1.0 + float(rng.uniform(*tier.slack_range))
+            q = None if quantum_frac is None else quantum_frac * t_a
+            yield Job(app=apps[idx], arrival=now,
+                      deadline=now + slack * t_a, job_id=jid,
+                      checkpoint_quantum=q, tier=tier)
+            jid += 1
 
 
 #: Default drift: a **bottleneck flip** — the app's compute shrinks while

@@ -46,10 +46,11 @@ except ImportError:  # not installed in this container — deterministic shim
 
 from repro.configs.paper_suite import PAPER_APPS
 from repro.core import (
-    EnergyTimePredictor, Job, PowerCapCoordinator, PowerTelemetry,
-    PredictorConfig, PreemptionConfig, PreemptionManager, Testbed,
-    V5E_CLASS, V5E_DVFS, V5LITE_CLASS, V5P_CLASS, build_dataset,
-    profile_features, rescue_stress_workload, run_schedule, stream_workload,
+    BATCH_TIER, BEST_EFFORT_TIER, DEFAULT_TIER, EnergyTimePredictor, Job,
+    PowerCapCoordinator, PowerTelemetry, PredictorConfig, PreemptionConfig,
+    PreemptionManager, SLO_TIER, Testbed, V5E_CLASS, V5E_DVFS, V5LITE_CLASS,
+    V5P_CLASS, build_dataset, profile_features, rescue_stress_workload,
+    run_schedule, stream_workload,
 )
 from repro.core.gbdt import GBDTParams
 from repro.core.policies import (MinEnergy, POLICY_NAMES, QueueAwareBudget,
@@ -103,6 +104,19 @@ def _jobs(seed: int, pool_idx: int, quantum: float) -> list[Job]:
                                 n_devices=n_dev))
     return [dataclasses.replace(j, checkpoint_quantum=quantum)
             for j in jobs]
+
+
+#: SLA tiers the multi-tenant fuzz assigns at random (PR 7) — includes
+#: the default tier so runs mix tagged and untagged work.
+_TIER_CHOICES = (SLO_TIER, BATCH_TIER, BEST_EFFORT_TIER, DEFAULT_TIER)
+
+
+def _tiered(jobs: list[Job], tier_seed: int) -> list[Job]:
+    """Deterministic random tier assignment over an existing stream."""
+    rng = np.random.default_rng(tier_seed)
+    picks = rng.integers(0, len(_TIER_CHOICES), size=len(jobs))
+    return [dataclasses.replace(j, tier=_TIER_CHOICES[int(k)])
+            for j, k in zip(jobs, picks)]
 
 
 def _coordinator(cap_kind: str, jobs, pool_idx: int, policy: str):
@@ -164,6 +178,28 @@ class TestDifferentialIdentity:
         b = _run(jobs, pool_idx, policy, None, mgr)
         _assert_identical(a, b)
         assert mgr.stats.preemptions == 0
+        assert all(r.segment == 0 and not r.preempted for r in b.records)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 50),
+           pool_idx=st.integers(0, len(_POOLS) - 1),
+           policy=st.sampled_from(list(POLICY_NAMES)),
+           quantum=st.floats(0.05, 2.0),
+           tier_seed=st.integers(0, 1000))
+    def test_tiered_segmented_never_preempted_is_bit_identical(
+            self, seed, pool_idx, policy, quantum, tier_seed):
+        """PR 7: the same identity with random SLA tiers on every job —
+        tier-priority queue keys and tier-weighted urgencies reorder
+        work, but a preemption-disabled multi-tenant run must still be
+        bit-identical to the plain (manager-less) engine on the same
+        tiered stream, and no tier rescue may fire."""
+        jobs = _tiered(_jobs(seed, pool_idx, quantum), tier_seed)
+        a = _run(jobs, pool_idx, policy, None, None)
+        mgr = PreemptionManager(_OFF)
+        b = _run(jobs, pool_idx, policy, None, mgr)
+        _assert_identical(a, b)
+        assert mgr.stats.preemptions == 0
+        assert mgr.stats.tier_rescues == 0
         assert all(r.segment == 0 and not r.preempted for r in b.records)
 
     @settings(max_examples=6, deadline=None)

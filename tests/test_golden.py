@@ -26,9 +26,11 @@ import numpy as np
 import pytest
 
 from repro.configs.paper_suite import PAPER_APPS
-from repro.core import (EnergyTimePredictor, PowerCapCoordinator,
-                        PredictorConfig, PreemptionManager, Testbed,
-                        build_dataset, make_workload, profile_features,
+from repro.core import (AdmissionController, BEST_EFFORT_TIER,
+                        EnergyTimePredictor, Job, PowerCapCoordinator,
+                        PredictorConfig, PreemptionManager, SLO_TIER,
+                        Testbed, build_dataset, make_workload,
+                        multi_tenant_workload, profile_features,
                         rescue_stress_workload, run_schedule)
 from repro.core.gbdt import GBDTParams
 from repro.core.policies import POLICY_NAMES
@@ -70,6 +72,30 @@ PRE_FIRE_KEY = "min-energy|preempt-fire|0"
 PRE_DECLINE_KEY = "min-energy|preempt-decline|0"
 PRE_FIRE_JOBS = 12
 PRE_DECLINE_QUANTUM = 0.5
+
+#: Multi-tenant canonical scenarios (PR 7), both min-energy:
+#:
+#: * **shed** — a 60-job multi-tenant flood (8x overload, 2 devices)
+#:   through an :class:`~repro.core.admission.AdmissionController`
+#:   (lookahead 20 s, threshold 0.5): overload checks fire, best-effort
+#:   work is deferred and shed, SLO/batch work is untouched. The trace
+#:   has strictly fewer records than jobs — the golden form of the shed
+#:   accounting.
+#: * **rescue** — a hand-built tier-inversion on one device: a doomed
+#:   best-effort whale (deadline 0.5x its DC time) is checkpointed for
+#:   an SLO short whose deadline is *later* than the whale's — exactly
+#:   the dispatch old deadline-only rescue would refuse — plus a second
+#:   SLO short served from the queue. Pins the tier-aware queue-rescue
+#:   path (edf_key disqualification + tier_rescues accounting).
+TEN_SHED_KEY = "min-energy|tenant-shed|0"
+TEN_RESCUE_KEY = "min-energy|tenant-rescue|0"
+TEN_SHED_JOBS = 60
+TEN_SHED_OVERLOAD = 8.0
+TEN_SHED_DEVICES = 2
+TEN_SHED_LOOKAHEAD = 20.0
+TEN_SHED_THRESHOLD = 0.5
+TEN_RESCUE_JOBS = 3
+TEN_RESCUE_QUANTUM = 0.2
 _GBDT = dict(iterations=80, depth=3, learning_rate=0.15)
 PREDICTOR_CONFIG = PredictorConfig(
     gbdt=GBDTParams(l2_leaf_reg=5.0, **_GBDT),
@@ -137,6 +163,9 @@ def compute_traces() -> dict:
     for key, (res, _) in _preemptive_runs().items():
         trace = trace_of(res.records)
         out[key] = {"digest": digest_of(trace), "records": trace}
+    for key, (res, _) in _tenant_runs().items():
+        trace = trace_of(res.records)
+        out[key] = {"digest": digest_of(trace), "records": trace}
     _CACHE["traces"] = out
     return out
 
@@ -176,6 +205,51 @@ def _preemptive_runs() -> dict:
                      predictor=f["predictor"], app_features=f["features"],
                      preemption=mgr), mgr)
     _CACHE["preempt"] = out
+    return out
+
+
+def _tenant_runs() -> dict:
+    """The two multi-tenant canonical runs, keyed like the golden file;
+    values are (ScheduleResult, AdmissionController | PreemptionManager)
+    so the gate tests can assert non-vacuity (shed really sheds, rescue
+    really fires a tier rescue)."""
+    if "tenants" in _CACHE:
+        return _CACHE["tenants"]
+    f = _fixture()
+    out = {}
+    jobs = list(multi_tenant_workload(
+        f["apps"], f["testbed"], n_jobs=TEN_SHED_JOBS, seed=0,
+        n_devices=TEN_SHED_DEVICES, overload=TEN_SHED_OVERLOAD))
+    adm = AdmissionController(lookahead_s=TEN_SHED_LOOKAHEAD,
+                              threshold=TEN_SHED_THRESHOLD)
+    out[TEN_SHED_KEY] = (
+        run_schedule(jobs, "min-energy", Testbed(seed=100),
+                     predictor=f["predictor"], app_features=f["features"],
+                     n_devices=TEN_SHED_DEVICES, admission=adm), adm)
+
+    by_name = {a.name: a for a in f["apps"]}
+    whale_app, short_app = by_name["lavaMD"], by_name["particlefilter_float"]
+    t_w = f["testbed"].true_time(whale_app, f["testbed"].dvfs.default_clock)
+    t_s = f["testbed"].true_time(short_app, f["testbed"].dvfs.default_clock)
+    whale = dataclasses.replace(
+        Job(app=whale_app, arrival=0.0, deadline=0.5 * t_w, job_id=0,
+            checkpoint_quantum=TEN_RESCUE_QUANTUM), tier=BEST_EFFORT_TIER)
+    s1 = dataclasses.replace(
+        Job(app=short_app, arrival=0.25 * t_w,
+            deadline=0.25 * t_w + 1.7 * t_s, job_id=1), tier=SLO_TIER)
+    s2 = dataclasses.replace(
+        Job(app=short_app, arrival=0.25 * t_w + 0.2,
+            deadline=0.25 * t_w + 0.2 + 2.2 * t_s, job_id=2),
+        tier=SLO_TIER)
+    # the SLO deadline is LATER than the whale's: deadline-only rescue
+    # would disqualify this head — only the tier-aware key allows it
+    assert s1.deadline > whale.deadline
+    mgr = PreemptionManager()
+    out[TEN_RESCUE_KEY] = (
+        run_schedule([whale, s1, s2], "min-energy", Testbed(seed=100),
+                     predictor=f["predictor"], app_features=f["features"],
+                     preemption=mgr), mgr)
+    _CACHE["tenants"] = out
     return out
 
 
@@ -269,16 +343,60 @@ def test_preempt_declined_matches_plain_trace():
     assert g[PRE_DECLINE_KEY]["digest"] == g["min-energy|0"]["digest"]
 
 
+@pytest.mark.parametrize("key", [TEN_SHED_KEY, TEN_RESCUE_KEY])
+def test_tenant_golden_trace(key):
+    """The multi-tenant canonical runs == their checked-in traces — the
+    admission (overload / defer / shed) and tier-rescue drift gates."""
+    golden = load_golden()["traces"][key]
+    fresh = compute_traces()[key]
+    for i, (got, want) in enumerate(zip(fresh["records"],
+                                        golden["records"])):
+        assert got == want, (
+            f"{key} record {i} drifted "
+            f"(columns: {_COLUMNS}):\n got {got}\nwant {want}")
+    assert len(fresh["records"]) == len(golden["records"])
+    assert fresh["digest"] == golden["digest"]
+
+
+def test_tenant_golden_scenarios_not_vacuous():
+    """The shed trace must actually shed best-effort work (and nothing
+    else, with exact conservation), and the rescue trace must contain a
+    real *tier* rescue — a preemption deadline-only rescue would have
+    refused — otherwise either gate silently stops covering its path."""
+    runs = _tenant_runs()
+    r_shed, adm = runs[TEN_SHED_KEY]
+    assert r_shed.shed_count > 0
+    assert all(j.tier.sheddable for j in r_shed.shed)
+    assert adm.stats.overloads > 0
+    assert len(r_shed.records) + r_shed.shed_count == TEN_SHED_JOBS
+    r_res, mgr = runs[TEN_RESCUE_KEY]
+    assert mgr.stats.tier_rescues > 0
+    assert mgr.stats.queue_rescues >= mgr.stats.tier_rescues
+    assert len(r_res.records) > TEN_RESCUE_JOBS    # whale split segments
+    # both SLO shorts land; the doomed best-effort whale pays the price
+    final = {r.job_id: r for r in r_res.final_records()}
+    assert final[1].met_deadline and final[2].met_deadline
+    assert not final[0].met_deadline
+
+
 def test_golden_file_is_self_consistent():
     """Stored digests match the stored records (catches hand-edits)."""
     g = load_golden()
     expected = {f"{p}|{s}" for p in POLICY_NAMES for s in SEEDS}
-    expected |= {CAP_KEY, PRE_FIRE_KEY, PRE_DECLINE_KEY}
+    expected |= {CAP_KEY, PRE_FIRE_KEY, PRE_DECLINE_KEY,
+                 TEN_SHED_KEY, TEN_RESCUE_KEY}
     assert set(g["traces"]) == expected
     for key, entry in g["traces"].items():
         assert digest_of(entry["records"]) == entry["digest"], key
         if key == PRE_FIRE_KEY:
             # preempted jobs split into segments: one record per segment
             assert len(entry["records"]) > PRE_FIRE_JOBS, key
+        elif key == TEN_SHED_KEY:
+            # shed jobs leave no record: strictly fewer records than
+            # jobs, even in the stored file
+            assert 0 < len(entry["records"]) < TEN_SHED_JOBS, key
+        elif key == TEN_RESCUE_KEY:
+            # the checkpointed whale splits into segments
+            assert len(entry["records"]) > TEN_RESCUE_JOBS, key
         else:
             assert len(entry["records"]) == len(PAPER_APPS), key

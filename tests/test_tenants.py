@@ -1,0 +1,338 @@
+"""Property battery for the multi-tenant tier machinery (PR 7).
+
+Three invariant families over tiers + admission control:
+
+* **Tier safety** — across hypothesis-sampled overload configurations,
+  the :class:`~repro.core.admission.AdmissionController` never sheds a
+  non-sheddable (SLO/batch) job, and every job in the stream is
+  accounted for exactly once: executed records + shed list partition
+  the submitted ids (no loss, no double-run).
+* **Weighted power shares** — under a binding cap the slack-weighted
+  grant share of contended headroom tracks
+  :class:`~repro.core.workload.TierSpec` weights: an SLO competitor's
+  headroom grant is ``w_slo / w_be`` times a best-effort competitor's
+  at equal slack, and on a symmetric overloaded stream the SLO tier's
+  time-integrated granted power per job dominates best-effort's.
+* **Tierless identity** — collapsing a stream to ANY single tier with
+  admission disabled (or attached but never seeing a sheddable job) is
+  bit-identical to the plain engine across policies x pools x cap
+  on/off, batched and scalar: tier weights are powers of two, so even
+  the power-cap urgency arithmetic is exact. The tier field must also
+  never knock dispatch off the vectorized fast path — batched and
+  scalar runs of a *mixed-tier* admission-controlled stream must
+  match bit-for-bit.
+
+Runs with or without the real ``hypothesis`` package (same shim
+contract as tests/test_differential.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # not installed in this container — deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.configs.paper_suite import PAPER_APPS
+from repro.core import (
+    AdmissionController, BATCH_TIER, BEST_EFFORT_TIER, DEFAULT_TIER,
+    EnergyTimePredictor, Job, PowerCapCoordinator, PredictorConfig,
+    PreemptionManager, SLO_TIER, Testbed, TIERS, V5E_CLASS, V5LITE_CLASS,
+    V5P_CLASS, build_dataset, edf_key, multi_tenant_workload,
+    profile_features, run_schedule,
+)
+from repro.core.gbdt import GBDTParams
+from repro.core.policies import POLICY_NAMES
+
+APPS = list(PAPER_APPS)[:6]
+SMALL = PredictorConfig(
+    gbdt=GBDTParams(iterations=60, depth=3, learning_rate=0.15,
+                    l2_leaf_reg=5.0),
+    gbdt_time=GBDTParams(iterations=60, depth=3, learning_rate=0.15,
+                         l2_leaf_reg=3.0),
+)
+
+#: Pool shapes the identity sweep draws from — uniform and mixed explicit
+#: pools plus the classless path (same axes as the differential suite).
+_POOLS: tuple = (
+    ("classless-2", None, 2),
+    ("uniform-v5e", [V5E_CLASS] * 3, 3),
+    ("mixed", [V5P_CLASS, V5E_CLASS, V5LITE_CLASS], 3),
+)
+
+_TIER_NAMES = ("slo", "batch", "best-effort", "default")
+
+
+@functools.lru_cache(maxsize=1)
+def _fixture():
+    tb = Testbed(seed=0)
+    X, yp, yt, _ = build_dataset(APPS, tb, seed=0)
+    rng = np.random.default_rng(7)
+    return {
+        "testbed": tb,
+        "predictor": EnergyTimePredictor(SMALL).fit(X, yp, yt),
+        "features": {a.name: profile_features(a, tb, rng=rng)
+                     for a in APPS},
+    }
+
+
+def _run(jobs, pool_idx, policy, *, admission=None, cap=None,
+         preemption=None, batch=True):
+    f = _fixture()
+    _, pool, n_dev = _POOLS[pool_idx]
+    coord = None if cap is None else PowerCapCoordinator(
+        cap, grant_policy="slack-weighted", guard=0.15)
+    return run_schedule(
+        jobs, policy, Testbed(seed=1000),
+        predictor=f["predictor"], app_features=f["features"],
+        n_devices=n_dev, device_classes=pool,
+        power_coordinator=coord, preemption=preemption,
+        admission=admission, batch_decide=batch)
+
+
+def _tenant_jobs(seed, pool_idx, n_jobs=40, overload=4.0, quantum=None):
+    f = _fixture()
+    _, pool, n_dev = _POOLS[pool_idx]
+    frac = None if quantum is None else quantum
+    return list(multi_tenant_workload(
+        APPS, f["testbed"], n_jobs=n_jobs, seed=seed, n_devices=n_dev,
+        pool=pool, overload=overload, quantum_frac=frac))
+
+
+def _assert_identical(a, b):
+    assert len(a.records) == len(b.records)
+    for i, (ra, rb) in enumerate(zip(a.records, b.records)):
+        assert ra == rb, (i, ra, rb)
+
+
+# ---------------------------------------------------------------------- #
+#  Tier safety: SLO is never shed; the stream is exactly partitioned
+# ---------------------------------------------------------------------- #
+class TestTierSafety:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 100),
+           pool_idx=st.integers(0, len(_POOLS) - 1),
+           overload=st.floats(1.0, 12.0),
+           lookahead=st.floats(5.0, 60.0))
+    def test_no_protected_job_ever_shed_and_conservation(
+            self, seed, pool_idx, overload, lookahead):
+        """Random (seed, pool, overload, lookahead): shedding only ever
+        hits sheddable tiers, and executed + shed partitions the ids."""
+        jobs = _tenant_jobs(seed, pool_idx, n_jobs=60, overload=overload)
+        adm = AdmissionController(lookahead_s=lookahead)
+        r = _run(jobs, pool_idx, "min-energy", admission=adm)
+        assert all(j.tier.sheddable for j in r.shed)
+        done = {rec.job_id for rec in r.records}
+        shed = {j.job_id for j in r.shed}
+        assert not done & shed
+        assert done | shed == {j.job_id for j in jobs}
+        # the stats ledger agrees with the returned lists
+        assert adm.stats.shed == len(r.shed) == r.shed_count
+        assert adm.stats.checks == len(jobs)
+
+    def test_shedding_actually_fires_under_flood(self):
+        """Non-vacuity for the battery: a sustained 10x flood on the
+        mixed pool does shed best-effort work."""
+        jobs = _tenant_jobs(3, 2, n_jobs=400, overload=10.0)
+        adm = AdmissionController(lookahead_s=30.0)
+        r = _run(jobs, 2, "min-energy", admission=adm)
+        assert r.shed_count > 0
+        assert all(j.tier.name == "best-effort" for j in r.shed)
+        assert adm.stats.overloads > 0
+
+    def test_deferred_jobs_are_never_stranded(self):
+        """Every deferred job is eventually released (and then executed)
+        or shed — the controller's ledger balances."""
+        jobs = _tenant_jobs(5, 2, n_jobs=300, overload=8.0)
+        adm = AdmissionController(lookahead_s=30.0, margin=0.1)
+        r = _run(jobs, 2, "min-energy", admission=adm)
+        assert adm.n_deferred == 0
+        # check()-time admits + later releases + sheds cover the stream
+        # (a parked job that dooms before release is shed, not released)
+        executed = adm.stats.admitted + adm.stats.released
+        assert executed + adm.stats.shed == len(jobs)
+        assert len(r.records) == executed
+
+    def test_tier_priority_orders_the_queue(self):
+        """edf_key: higher tier first, then earlier deadline — and equal
+        tiers reduce to the plain EDF comparison."""
+        early_be = dataclasses.replace(
+            Job(app=APPS[0], arrival=0.0, deadline=1.0, job_id=0),
+            tier=BEST_EFFORT_TIER)
+        late_slo = dataclasses.replace(
+            Job(app=APPS[0], arrival=0.0, deadline=50.0, job_id=1),
+            tier=SLO_TIER)
+        assert edf_key(late_slo) < edf_key(early_be)
+        a = dataclasses.replace(early_be, tier=SLO_TIER)
+        assert edf_key(a) < edf_key(late_slo)
+        assert TIERS["default"].weight == 1.0
+        assert all(TIERS[n].weight in (1.0, 2.0, 4.0) for n in TIERS)
+
+
+# ---------------------------------------------------------------------- #
+#  Weighted power shares under a binding cap
+# ---------------------------------------------------------------------- #
+class TestWeightedShares:
+    def _coordinator(self, cap_w):
+        # 10 devices so the per-device uniform floor (cap/n) sits well
+        # below the weighted shares under test — the floor would
+        # otherwise mask the low-weight competitor's share
+        coord = PowerCapCoordinator(cap_w, grant_policy="slack-weighted",
+                                    guard=0.0)
+        coord.reset([10.0] * 10, t_min_fn=lambda job, cls: 1.0)
+        return coord
+
+    def test_offer_share_tracks_tier_weight_exactly(self):
+        """Two equal-slack competitors: the SLO offer's headroom share is
+        w_slo/(w_slo+w_be) and the best-effort share the complement — the
+        grant ratio equals the weight ratio."""
+        coord = self._coordinator(300.0)
+        slo = dataclasses.replace(
+            Job(app=APPS[0], arrival=0.0, deadline=10.0, job_id=0),
+            tier=SLO_TIER)
+        be = dataclasses.replace(
+            Job(app=APPS[0], arrival=0.0, deadline=10.0, job_id=1),
+            tier=BEST_EFFORT_TIER)
+        queue_be = [(edf_key(be), 1, be)]
+        queue_slo = [(edf_key(slo), 0, slo)]
+        g_slo = coord.offer(0, slo, 0.0, queue_be) - 10.0
+        coord.stats.offers -= 1  # symmetric re-ask, not a new dispatch
+        g_be = coord.offer(0, be, 0.0, queue_slo) - 10.0
+        head = coord.headroom_w
+        w = SLO_TIER.weight / (SLO_TIER.weight + BEST_EFFORT_TIER.weight)
+        assert math.isclose(g_slo, head * w, rel_tol=1e-12)
+        assert math.isclose(g_be, head * (1.0 - w), rel_tol=1e-12)
+        assert math.isclose(g_slo / g_be,
+                            SLO_TIER.weight / BEST_EFFORT_TIER.weight,
+                            rel_tol=1e-12)
+
+    def test_uncontended_share_is_whole_headroom(self):
+        """No competitors: any tier gets the full headroom — unclaimed
+        share redistributes, weights only matter under contention."""
+        for tier in (SLO_TIER, BEST_EFFORT_TIER):
+            coord = self._coordinator(300.0)
+            job = dataclasses.replace(
+                Job(app=APPS[0], arrival=0.0, deadline=10.0, job_id=0),
+                tier=tier)
+            assert math.isclose(coord.offer(0, job, 0.0, []),
+                                10.0 + coord.headroom_w, rel_tol=1e-12)
+
+    def test_granted_integral_respects_weighted_shares(self):
+        """A genuinely mixed contended queue under a binding cap: offer
+        every competitor its dispatch grant against the queue of all the
+        others and integrate over a unit interval per tier. The SLO
+        tier's per-job granted-headroom integral must dominate
+        best-effort's, and the aggregate split must sit between the
+        uniform floor and the pure-weight split."""
+        coord = self._coordinator(300.0)
+        jobs = []
+        for i in range(8):
+            tier = SLO_TIER if i % 2 == 0 else BEST_EFFORT_TIER
+            jobs.append(dataclasses.replace(
+                Job(app=APPS[0], arrival=0.0, deadline=10.0, job_id=i),
+                tier=tier))
+        integral = {"slo": 0.0, "best-effort": 0.0}
+        for i, job in enumerate(jobs):
+            queue = [(edf_key(j), k, j)
+                     for k, j in enumerate(jobs) if k != i]
+            offer = coord.offer(i, job, 0.0, queue)
+            # integrate the above-idle grant over a unit hold
+            integral[job.tier.name] += (offer - 10.0) * 1.0
+        assert integral["slo"] > integral["best-effort"]
+        # per-job: each SLO competitor out-grants each best-effort one
+        # by construction of the weighted shares (equal slacks)
+        per_job = {t: v / 4 for t, v in integral.items()}
+        assert per_job["slo"] > per_job["best-effort"]
+        # and the split is bounded by the pure weight ratio (4:1) —
+        # contention against mixed competitors can only compress it
+        ratio = per_job["slo"] / per_job["best-effort"]
+        assert 1.0 < ratio <= SLO_TIER.weight / BEST_EFFORT_TIER.weight \
+            + 1e-9
+
+
+# ---------------------------------------------------------------------- #
+#  Tierless identity: one tier + admission off == plain engine
+# ---------------------------------------------------------------------- #
+class TestTierlessIdentity:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 50),
+           pool_idx=st.integers(0, len(_POOLS) - 1),
+           policy=st.sampled_from(list(POLICY_NAMES)),
+           tier_name=st.sampled_from(("slo", "batch", "best-effort")),
+           capped=st.integers(0, 1),
+           batch=st.integers(0, 1))
+    def test_single_tier_bit_identical(self, seed, pool_idx, policy,
+                                       tier_name, capped, batch):
+        """Random (seed, pool, policy, tier, cap, batched/scalar): an
+        all-one-tier stream with admission disabled reproduces the
+        default-tier engine's records bit-for-bit."""
+        jobs = _tenant_jobs(seed, pool_idx, n_jobs=24, overload=2.0)
+        base_jobs = [dataclasses.replace(j, tier=DEFAULT_TIER)
+                     for j in jobs]
+        tier = TIERS[tier_name]
+        tier_jobs = [dataclasses.replace(j, tier=tier) for j in jobs]
+        cap = None
+        if capped:
+            r0 = _run(base_jobs, pool_idx, policy)
+            _, pool, n_dev = _POOLS[pool_idx]
+            if pool is None:
+                idle = _fixture()["testbed"].idle_power() * n_dev
+            else:
+                idle = sum(c.idle_power() for c in pool)
+            peak = max(rec.power_w for rec in r0.records)
+            cap = idle + 0.7 * max(peak, 1.0)
+        base = _run(base_jobs, pool_idx, policy, cap=cap,
+                    batch=bool(batch))
+        r = _run(tier_jobs, pool_idx, policy, cap=cap, batch=bool(batch))
+        _assert_identical(base, r)
+        assert r.shed == []
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 50),
+           policy=st.sampled_from(list(POLICY_NAMES)))
+    def test_attached_controller_without_sheddable_work_is_inert(
+            self, seed, policy):
+        """An AdmissionController wired into the engine admits every
+        non-sheddable job untouched: all-SLO streams run bit-identical
+        to the plain engine even with the controller attached."""
+        jobs = _tenant_jobs(seed, 2, n_jobs=24, overload=6.0)
+        slo_jobs = [dataclasses.replace(j, tier=SLO_TIER) for j in jobs]
+        base_jobs = [dataclasses.replace(j, tier=DEFAULT_TIER)
+                     for j in jobs]
+        base = _run(base_jobs, 2, policy)
+        r = _run(slo_jobs, 2, policy,
+                 admission=AdmissionController(lookahead_s=20.0))
+        _assert_identical(base, r)
+        assert r.shed == []
+
+    def test_mixed_tier_batched_matches_scalar(self):
+        """Tier fields must not knock dispatch off the vectorized fast
+        path: a mixed-tier admission-controlled stream decided batched
+        is bit-identical to the scalar oracle."""
+        jobs = _tenant_jobs(7, 2, n_jobs=120, overload=8.0)
+        for policy in POLICY_NAMES:
+            rb = _run(jobs, 2, policy, batch=True,
+                      admission=AdmissionController(lookahead_s=30.0))
+            rs = _run(jobs, 2, policy, batch=False,
+                      admission=AdmissionController(lookahead_s=30.0))
+            _assert_identical(rb, rs)
+            assert [j.job_id for j in rb.shed] == \
+                [j.job_id for j in rs.shed]
+
+    def test_misses_by_tier_keys(self):
+        """The per-tier miss report keys by tier name and only counts
+        final (non-preempted) records."""
+        jobs = _tenant_jobs(3, 2, n_jobs=200, overload=10.0,
+                            quantum=0.25)
+        r = _run(jobs, 2, "min-energy",
+                 admission=AdmissionController(lookahead_s=30.0),
+                 preemption=PreemptionManager())
+        by_tier = r.misses_by_tier()
+        assert set(by_tier) <= set(_TIER_NAMES)
+        assert sum(by_tier.values()) == r.misses
