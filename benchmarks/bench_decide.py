@@ -18,7 +18,11 @@ bit-identity oracle. This bench measures exactly that trade on 100k-job /
   dispatch off the vectorized fast path, so this scenario rides the
   same ≥3x speedup gate as the untagged streams (admission control is
   deliberately absent — its per-arrival queue scan is an overload
-  feature, not a steady-state dispatch cost).
+  feature, not a steady-state dispatch cost);
+* ``coldstart``     — classless pool on a stream where a third of the
+  jobs come from never-profiled apps served by synthesized clock-ladders
+  (PR 8): cold-table resolution must ride the same batched prefetch and
+  scalar-identity contract as profiled tables.
 
 Every scenario runs the *same* job stream twice — ``batch_decide=False``
 (scalar oracle) then ``batch_decide=True`` — asserts the two record
@@ -52,8 +56,10 @@ import time
 
 import numpy as np
 
+from benchmarks.bench_coldstart import novel_apps
 from benchmarks.common import csv, fixtures, write_bench_json
-from repro.core import (PredictionService, PowerCapCoordinator, RiskAware,
+from repro.core import (ColdStartSynthesizer, PredictionService,
+                        PowerCapCoordinator, RiskAware,
                         V5E_CLASS, V5E_DVFS, V5LITE_CLASS, V5P_CLASS,
                         heterogeneous_workload, make_device_pool,
                         multi_tenant_workload, run_schedule,
@@ -165,6 +171,20 @@ def run_scenarios(f, n_jobs: int) -> dict:
     ten = list(multi_tenant_workload(apps, tb, n_jobs=n_jobs, seed=1,
                                      n_devices=N_DEVICES, overload=1.5))
     out["tenant"] = _scenario(f, svc, "tenant", ten, None, None)
+
+    # cold-start stream: never-profiled apps resolved through synthesized
+    # ladders; pre-registered and pre-warmed like the profiled corpus so
+    # both sides race on dispatch decisions, not one-time synthesis
+    svc_c = _service(f)
+    svc_c.attach_synthesizer(ColdStartSynthesizer())
+    novel = novel_apps(list(apps)[-4:], 4)
+    _warm_tables(svc_c, f, None)
+    for app in novel:
+        svc_c.note_app(app)
+        svc_c.table(app.name, None)
+    cold = list(stream_workload(list(apps) + novel, tb, n_jobs=n_jobs,
+                                seed=1, n_devices=N_DEVICES))
+    out["coldstart"] = _scenario(f, svc_c, "coldstart", cold, None, None)
 
     svc_h = _service(f)
     _warm_tables(svc_h, f, pool)

@@ -48,6 +48,9 @@ BENCHES = [
     ("tenants", "benchmarks.bench_tenants",
      "Beyond paper: multi-tenant SLA tiers — overload admission control, "
      "SLO isolation at 10x overload, weighted power shares"),
+    ("coldstart", "benchmarks.bench_coldstart",
+     "Beyond paper: cold-start clock-ladder synthesis — novel-app stream, "
+     "synthesized+corrected vs fully-profiled oracle regret"),
     ("kernels", "benchmarks.bench_kernels",
      "Kernel micro-benchmarks"),
     ("roofline", "benchmarks.bench_roofline",

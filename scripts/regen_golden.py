@@ -52,7 +52,12 @@ def main() -> None:
                         f"work shed) and {test_golden.TEN_RESCUE_KEY!r}: "
                         "hand-built doomed best-effort whale + 2 SLO "
                         "shorts, 1 device, default PreemptionManager "
-                        "(tier rescue fires on a later-deadline SLO head)",
+                        "(tier rescue fires on a later-deadline SLO head); "
+                        f"plus {test_golden.COLD_KEY!r}: seed-0 workload "
+                        f"with the last {test_golden.COLD_HELDOUT} paper "
+                        "apps' feature vectors withheld, min-energy, "
+                        "1 device, default ColdStartSynthesizer (held-out "
+                        "apps dispatch on synthesized clock-ladders)",
             "regen": "PYTHONPATH=src python scripts/regen_golden.py",
             "columns": list(test_golden._COLUMNS),
         },

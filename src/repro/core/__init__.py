@@ -20,7 +20,10 @@ from .workload import (BATCH_TIER, BEST_EFFORT_TIER, DEFAULT_TIER, Job,
                        rescue_stress_workload, stream_workload)
 from .admission import AdmissionController, AdmissionStats
 from .prediction_service import (ClockTable, PredictionService, ServiceStats,
-                                 StackedTable, kernel_min_rows_default)
+                                 StackedTable, UnknownAppError,
+                                 kernel_min_rows_default)
+from .coldstart import (ColdStartConfig, ColdStartStats, ColdStartSynthesizer,
+                        static_features)
 from .batch_decide import DecisionCore, DecisionStats
 from .policies import (BudgetManager, DeviceCandidate, Policy,
                        QueueAwareBudget, RiskAware, VirtualPacingBudget,
@@ -47,6 +50,9 @@ __all__ = [
     "drifting_workload", "drift_profile",
     "heterogeneous_workload", "make_device_pool", "cap_stress_workload",
     "ClockTable", "PredictionService", "ServiceStats", "StackedTable",
+    "UnknownAppError",
+    "ColdStartConfig", "ColdStartStats", "ColdStartSynthesizer",
+    "static_features",
     "kernel_min_rows_default", "DecisionCore", "DecisionStats",
     "BudgetManager", "DeviceCandidate", "Policy", "QueueAwareBudget",
     "RiskAware", "VirtualPacingBudget",

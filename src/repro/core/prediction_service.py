@@ -56,11 +56,22 @@ Invariants (the contracts tests/test_online.py and tests/test_engine.py pin):
 * **Frozen-path identity.** With no corrector attached — or an attached
   corrector holding zero observations (its scale is exactly ``exp(0)``) —
   :meth:`table` output is bit-identical to the pre-feedback service.
+* **Cold-start tier (PR 8).** An attached
+  :class:`~repro.core.coldstart.ColdStartSynthesizer` makes unprofiled
+  apps resolvable: :meth:`resolve` returns a ``("cold", name)`` key with
+  the app's static embedding, :meth:`base_table` builds the analytic
+  roofline ladder (``source="synthesized"``) instead of calling the
+  predictor, and the correction layer refines it exactly like a profiled
+  table. Profiled apps never touch the synthesizer — attaching one
+  changes no profiled-app decision (invariant #10,
+  docs/architecture.md). Unknown apps with no synthesizer coverage raise
+  a typed :class:`UnknownAppError` carrying the nearest profiled name.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import difflib
 import os
 from typing import Optional, Sequence
 
@@ -73,8 +84,32 @@ from .predictor import EnergyTimePredictor
 from .simulator import AppProfile, Testbed
 
 __all__ = ["ClockTable", "StackedTable", "ServiceStats", "PredictionService",
-           "DEFAULT_KERNEL_MIN_ROWS", "KERNEL_MIN_ROWS_ENV",
-           "kernel_min_rows_default"]
+           "UnknownAppError", "DEFAULT_KERNEL_MIN_ROWS",
+           "KERNEL_MIN_ROWS_ENV", "kernel_min_rows_default"]
+
+
+class UnknownAppError(KeyError):
+    """An app has no profiled feature vector and no attached cold-start
+    synthesizer covers it. Subclasses :class:`KeyError` for back-compat
+    with callers that caught the old bare ``KeyError``; the message names
+    the nearest profiled app (closest-spelled name) so a mis-keyed job is
+    diagnosable from the traceback alone."""
+
+    def __init__(self, name: str, known=()):
+        self.name = name
+        matches = difflib.get_close_matches(name, list(known), n=1,
+                                            cutoff=0.0)
+        self.suggestion = matches[0] if matches else None
+        msg = (f"unknown app {name!r}: no profiled feature vector and no "
+               "cold-start synthesizer registration for it")
+        if self.suggestion is not None:
+            msg += f" (nearest profiled app: {self.suggestion!r})"
+        else:
+            msg += " (no profiled apps at all)"
+        super().__init__(msg)
+
+    def __str__(self) -> str:   # KeyError wraps its arg in quotes — undo
+        return self.args[0]
 
 #: Measured batch-routing threshold for the Pallas GBDT kernel
 #: (:mod:`repro.kernels.gbdt_predict`): predictor batches with at least
@@ -116,7 +151,8 @@ class ClockTable:
     clocks: tuple[ClockPair, ...]
     P: np.ndarray                 # predicted/true power (W) per clock
     T: np.ndarray                 # predicted/true time (s) per clock
-    source: str = "predicted"     # "predicted" | "truth"
+    source: str = "predicted"     # "predicted"|"truth"|"corrected"
+                                  # |"synthesized" (cold-start tier)
 
     def __len__(self) -> int:
         return len(self.clocks)
@@ -193,6 +229,7 @@ class ServiceStats:
     stacked_builds: int = 0       # stacked (candidate x clock) view builds
     stacked_hits: int = 0         # joint decisions served from stacked cache
     prefetched_tables: int = 0    # tables built via batched prefetch
+    synthesized_builds: int = 0   # cold-start analytic ladder builds
 
     def summary(self) -> str:
         return (f"table_builds={self.table_builds} hits={self.table_hits} "
@@ -250,6 +287,7 @@ class PredictionService:
         self.clocks: tuple[ClockPair, ...] = tuple(dvfs.clock_list())
         self._clock_X = [clock_features(c, dvfs) for c in self.clocks]
         self._corrector = None
+        self._synthesizer = None
         # corrected views keyed (app name, class key); base tables keyed
         # (resolved profile key, class key). class key None = the service's
         # own dvfs — a DeviceClass wrapping the same config normalizes to
@@ -286,11 +324,24 @@ class PredictionService:
     def resolve(self, name: str) -> tuple[tuple, np.ndarray]:
         """Profile vector used to predict for ``name``: the app's own
         default-clock profile, or — when a correlation index is configured —
-        the correlated exhaustively-profiled app's vector (paper §III-D)."""
+        the correlated exhaustively-profiled app's vector (paper §III-D).
+
+        Unprofiled apps resolve to ``("cold", name)`` with their static
+        embedding when the attached synthesizer has them registered
+        (correlation indirection deliberately skipped — the cold tier does
+        its own nearest-profiled mapping); otherwise a typed
+        :class:`UnknownAppError` is raised."""
         hit = self._resolved.get(name)
         if hit is not None:
             return hit
-        feats = self.app_features[name]
+        feats = (self.app_features or {}).get(name)
+        if feats is None:
+            synth = self._synthesizer
+            if synth is not None and synth.knows(name):
+                resolved = (("cold", name), synth.static_features_of(name))
+                self._resolved[name] = resolved
+                return resolved
+            raise UnknownAppError(name, known=self.app_features or ())
         key = ("own", name)
         if self.corr_index is not None and self.corr_features is not None:
             corr_name = self.corr_index.correlated(feats, exclude=name)
@@ -382,7 +433,16 @@ class PredictionService:
         if tab is not None:
             self.stats.table_hits += 1
             return tab
-        tab = self.table_for_features(feats, class_key=ck)
+        if feat_key[0] == "cold":
+            # cold-start tier: analytic roofline ladder from the attached
+            # synthesizer — no predictor rows, same cache-key contract
+            clocks = self.clocks_for(ck)
+            P, T = self._synthesizer.synthesize(
+                name, clocks, self._class_dvfs(ck))
+            tab = ClockTable(clocks=clocks, P=P, T=T, source="synthesized")
+            self.stats.synthesized_builds += 1
+        else:
+            tab = self.table_for_features(feats, class_key=ck)
         self._tables[key] = tab
         self.stats.table_builds += 1
         return tab
@@ -454,6 +514,47 @@ class PredictionService:
     def corrector(self):
         return self._corrector
 
+    # ------------------------------------------------------------------ #
+    #  Cold-start tier (PR 8)
+    # ------------------------------------------------------------------ #
+    def attach_synthesizer(self, synthesizer) -> None:
+        """Attach a cold-start table source (see
+        :class:`~repro.core.coldstart.ColdStartSynthesizer`): unprofiled
+        apps it registers become resolvable, served analytic
+        ``source="synthesized"`` base tables that the correction layer
+        refines like any profiled table. Profiled apps are unaffected —
+        their resolve path never consults the synthesizer."""
+        self._synthesizer = synthesizer
+        if synthesizer is not None:
+            synthesizer.bind(self)
+        self._epoch += 1
+
+    def detach_synthesizer(self) -> None:
+        """Remove the cold-start tier. Previously synthesized base tables
+        stay cached (they are pure functions of frozen inputs); apps that
+        only resolved through the synthesizer become unknown again for
+        *new* resolutions."""
+        self._synthesizer = None
+        self._resolved = {n: v for n, v in self._resolved.items()
+                          if v[0][0] != "cold"}
+        self._epoch += 1
+
+    @property
+    def synthesizer(self):
+        return self._synthesizer
+
+    def note_app(self, app: AppProfile) -> bool:
+        """Admission-time registration hook (the engine calls this on
+        every arrival when a synthesizer is attached): profiled apps are
+        a dictionary-membership no-op — the zero-unseen-apps identity —
+        while unprofiled ones register their static embedding with the
+        synthesizer. Returns True when the app was newly registered."""
+        if self._synthesizer is None:
+            return False
+        if self.app_features is not None and app.name in self.app_features:
+            return False
+        return self._synthesizer.register(app)
+
     def invalidate(self, name: Optional[str] = None) -> int:
         """Targeted corrected-cache invalidation: drop app ``name``'s
         corrected tables — across every device class — (all apps when
@@ -463,6 +564,10 @@ class PredictionService:
         inputs and are deliberately *not* invalidatable."""
         self.stats.invalidations += 1
         self._epoch += 1
+        if name is not None and self._synthesizer is not None:
+            # observation-driven invalidations are the cold-start
+            # promotion clock (cold → warmed); profiled names are a no-op
+            self._synthesizer.note_invalidation(name)
         if name is None:
             n = len(self._corrected)
             self._corrected.clear()
@@ -550,6 +655,13 @@ class PredictionService:
                 key = (feat_key, ck)
                 if key in self._tables or key in seen:
                     continue
+                if feat_key[0] == "cold":
+                    # synthesized ladders are analytic, not predictor
+                    # rows — build individually, keep them out of the
+                    # stacked predictor batch
+                    self.base_table(name, cls)
+                    built += 1
+                    continue
                 seen.add(key)
                 todo.append((key, feats))
             if not todo:
@@ -604,7 +716,19 @@ class PredictionService:
         if val is None:
             d = self._class_dvfs(ck)
             clock = d.max_clock if which == "min" else d.default_clock
-            feats = self.app_features[name]
+            feats = (self.app_features or {}).get(name)
+            if feats is None:
+                synth = self._synthesizer
+                if synth is None or not synth.knows(name):
+                    raise UnknownAppError(name,
+                                          known=self.app_features or ())
+                # cold apps: evaluate the synthesized roofline at the
+                # exact max/default clock (which need not be a ladder
+                # element) — same formula every table-driven decision sees
+                _, T1 = synth.synthesize(name, (clock,), d)
+                val = float(T1[0])
+                cache[(name, ck)] = val
+                return val
             if ck is not None:
                 feats = self.class_features.get(ck, {}).get(name, feats)
             x = np.concatenate([feats, clock_features(clock, d)])

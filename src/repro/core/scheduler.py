@@ -119,6 +119,7 @@ def run_schedule(
     preemption: object | None = None,
     batch_decide: bool = True,
     admission: object | None = None,
+    coldstart: object | None = None,
 ) -> ScheduleResult:
     """Event-driven schedule execution on the simulated testbed.
 
@@ -172,6 +173,16 @@ def run_schedule(
     lookahead window; shed jobs land in ``ScheduleResult.shed``.
     ``None`` (default) runs zero admission code — bit-identical to the
     plain engine.
+
+    ``coldstart``: a :class:`~repro.core.coldstart.ColdStartSynthesizer`
+    (PR 8) — attached to the service as the cold-start table-source
+    tier, so unprofiled apps arriving mid-stream get an analytic
+    roofline ladder synthesized from their static counters (refined by
+    ``feedback`` like any profiled table) instead of raising
+    :class:`~repro.core.prediction_service.UnknownAppError`. ``None``
+    (default) leaves the service's synthesizer state untouched; with
+    every app profiled an attached synthesizer changes nothing —
+    bit-identical to the plain engine (invariant #10).
     """
     if isinstance(policy, Policy):
         pol, policy = policy, policy.name
@@ -188,6 +199,8 @@ def run_schedule(
             d, predictor=predictor, app_features=app_features,
             corr_index=corr_index, corr_features=corr_features,
             testbed=testbed)
+    if coldstart is not None:
+        service.attach_synthesizer(coldstart)
     predictor = service.predictor
     app_features = service.app_features
     if policy in ("d-dvfs", "min-energy", "risk-aware") and predictor is None:

@@ -1,0 +1,279 @@
+"""Property battery for the cold-start synthesis tier (PR 8).
+
+Three pinned properties from the issue, plus lifecycle/unit coverage:
+
+* **Identity** — with zero unseen apps, attaching a synthesizer is
+  bit-identical to the plain engine for all six policies (invariant #10,
+  the identity-oracle pattern of test_tenants.py / test_differential.py).
+* **Ladder shape** — synthesized (P, T) tables are finite and positive,
+  and T is monotone non-increasing in core clock at fixed mem clock on
+  every stock :class:`~repro.core.dvfs.DeviceClass` ladder, for
+  hypothesis-random static counters.
+* **Corrector convergence** — the PR 2 RLS corrector refines synthesized
+  tables toward a perturbed ground truth, and the corrected table is
+  order-independent under observation-stream permutation (commutative
+  sufficient statistics).
+"""
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # not installed in this container — deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.configs.paper_suite import PAPER_APPS
+from repro.core import (
+    AppProfile, ColdStartConfig, ColdStartSynthesizer, DEVICE_CLASSES,
+    EnergyTimePredictor, Observation, ObservationStore, PredictionService,
+    PredictorConfig, RLSCorrector, Testbed, V5E_DVFS, build_dataset,
+    profile_features, run_schedule, static_features, stream_workload,
+)
+from repro.core.coldstart import SMOOTH_P
+from repro.core.features import FEATURE_NAMES
+from repro.core.gbdt import GBDTParams
+from repro.core.online import clock_basis
+from repro.core.policies import POLICY_NAMES
+
+APPS = list(PAPER_APPS)[:8]
+SMALL = PredictorConfig(
+    gbdt=GBDTParams(iterations=80, depth=3, learning_rate=0.15,
+                    l2_leaf_reg=5.0),
+    gbdt_time=GBDTParams(iterations=80, depth=3, learning_rate=0.15,
+                         l2_leaf_reg=3.0),
+)
+
+
+@pytest.fixture(scope="module")
+def testbed():
+    return Testbed(seed=0)
+
+
+@pytest.fixture(scope="module")
+def fitted(testbed):
+    X, yp, yt, _ = build_dataset(APPS, testbed, seed=0)
+    return EnergyTimePredictor(SMALL).fit(X, yp, yt)
+
+
+@pytest.fixture(scope="module")
+def app_feats(testbed):
+    rng = np.random.default_rng(7)
+    return {a.name: profile_features(a, testbed, rng=rng) for a in APPS}
+
+
+def _service(testbed, fitted, app_feats) -> PredictionService:
+    return PredictionService(V5E_DVFS, predictor=fitted,
+                             app_features=dict(app_feats), testbed=testbed)
+
+
+def _rand_app(rng: np.random.Generator, i: int = 0) -> AppProfile:
+    return AppProfile(
+        name=f"h-{i}",
+        flops=10.0 ** rng.uniform(10.0, 15.0),
+        hbm_bytes=10.0 ** rng.uniform(8.0, 12.5),
+        coll_bytes=float(rng.choice([0.0, 10.0 ** rng.uniform(6.0, 11.0)])),
+        overhead_s=float(rng.uniform(0.0, 2.0)),
+        kind=str(rng.choice(["kernel", "train", "prefill", "decode"])),
+        n_chips=int(rng.choice([1, 4, 16])))
+
+
+# ---------------------------------------------------------------------- #
+#  Property (a): zero unseen apps => bit-identity, all six policies
+# ---------------------------------------------------------------------- #
+class TestZeroUnseenIdentity:
+    def test_all_policies_bit_identical(self, testbed, fitted, app_feats):
+        """Invariant #10: an attached synthesizer never changes
+        profiled-app decisions — same records, same RNG draws."""
+        jobs = list(stream_workload(APPS, testbed, n_jobs=40, seed=5,
+                                    n_devices=2))
+        for pol in POLICY_NAMES:
+            plain = run_schedule(jobs, pol, Testbed(seed=200),
+                                 service=_service(testbed, fitted,
+                                                  app_feats), n_devices=2)
+            cold = run_schedule(jobs, pol, Testbed(seed=200),
+                                service=_service(testbed, fitted, app_feats),
+                                n_devices=2,
+                                coldstart=ColdStartSynthesizer())
+            assert cold.records == plain.records, pol
+            assert cold.total_energy == plain.total_energy, pol
+
+    def test_synthesizer_untouched_when_all_profiled(self, testbed, fitted,
+                                                     app_feats):
+        synth = ColdStartSynthesizer()
+        jobs = list(stream_workload(APPS, testbed, n_jobs=30, seed=6,
+                                    n_devices=1))
+        run_schedule(jobs, "min-energy", Testbed(seed=201),
+                     service=_service(testbed, fitted, app_feats),
+                     coldstart=synth)
+        assert synth.stats.registered == 0
+        assert synth.stats.synthesized_tables == 0
+
+
+# ---------------------------------------------------------------------- #
+#  Property (b): ladder shape on every stock DeviceClass
+# ---------------------------------------------------------------------- #
+class TestSynthesizedLadderShape:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_finite_positive_monotone(self, seed):
+        """Synthesized (P, T) finite and positive; T monotone
+        non-increasing in core clock at fixed mem clock, on every stock
+        device-class ladder, for random static counters — with and
+        without a profiled corpus behind the κ-transfer."""
+        rng = np.random.default_rng(seed)
+        app = _rand_app(rng, seed)
+        synth = ColdStartSynthesizer(dvfs=V5E_DVFS)
+        synth.register(app)
+        for cls in DEVICE_CLASSES.values():
+            d = cls.dvfs
+            clocks = d.clock_list()
+            P, T = synth.synthesize(app.name, clocks, d)
+            assert np.all(np.isfinite(P)) and np.all(np.isfinite(T))
+            assert np.all(P > 0) and np.all(T > 0)
+            for s_mem, group in itertools.groupby(
+                    zip(clocks, T), key=lambda ct: ct[0].s_mem):
+                ladder = [t for _, t in group]   # core-ascending per block
+                for lo, hi in zip(ladder, ladder[1:]):
+                    assert hi <= lo * (1.0 + 1e-9), (cls.name, s_mem)
+
+    def test_kappa_transfer_preserves_shape(self, testbed, fitted,
+                                            app_feats):
+        """Same shape properties when κ comes from a profiled neighbor
+        (service-backed path) instead of the κ=1 analytic prior."""
+        svc = _service(testbed, fitted, app_feats)
+        synth = ColdStartSynthesizer()
+        svc.attach_synthesizer(synth)
+        rng = np.random.default_rng(3)
+        for i in range(5):
+            app = _rand_app(rng, i)
+            assert svc.note_app(app)
+            assert synth.neighbor(app.name) in app_feats
+            tab = svc.base_table(app.name)
+            assert tab.source == "synthesized"
+            assert np.all(np.isfinite(tab.P)) and np.all(tab.P > 0)
+            assert np.all(np.isfinite(tab.T)) and np.all(tab.T > 0)
+
+    def test_static_features_shape_and_finiteness(self):
+        rng = np.random.default_rng(11)
+        for i in range(10):
+            v = static_features(_rand_app(rng, i), V5E_DVFS)
+            assert v.shape == (len(FEATURE_NAMES),)
+            assert np.all(np.isfinite(v))
+
+
+# ---------------------------------------------------------------------- #
+#  Property (c): corrector convergence + order independence
+# ---------------------------------------------------------------------- #
+class TestCorrectorOverSynthesized:
+    def _synth_table(self):
+        synth = ColdStartSynthesizer(dvfs=V5E_DVFS)
+        synth.register(AppProfile(name="cold-app", flops=5e13,
+                                  hbm_bytes=2e11, overhead_s=0.1))
+        clocks = V5E_DVFS.clock_list()
+        P, T = synth.synthesize("cold-app", clocks, V5E_DVFS)
+        return clocks, P, T
+
+    def test_convergence_toward_truth(self):
+        """Feeding residuals of a multiplicatively-biased ground truth
+        shrinks the corrected table's error well below the frozen
+        synthesized prior's."""
+        clocks, P, T = self._synth_table()
+        w_true = np.array([0.35, -0.2, 0.1])    # log-bias on [1, sc, sm]
+        T_true = T * np.exp([w_true @ clock_basis(ck) for ck in clocks])
+        store = ObservationStore()
+        corr = RLSCorrector(store)
+        rng = np.random.default_rng(0)
+        for i in rng.choice(len(clocks), size=40):
+            ck = clocks[i]
+            store.update(Observation(
+                name="cold-app", clock=ck, time_s=float(T_true[i]),
+                power_w=1.0, r_time=float(np.log(T_true[i] / T[i])),
+                r_power=0.0))
+        _, T_corr = corr.correct("cold-app", clocks, P, T)
+        err_frozen = np.abs(np.log(T / T_true)).mean()
+        err_corr = np.abs(np.log(T_corr / T_true)).mean()
+        assert err_corr < 0.2 * err_frozen
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_order_independence(self, seed):
+        """Any permutation of the same observation multiset yields the
+        same corrected table (commutative sufficient statistics)."""
+        clocks, P, T = self._synth_table()
+        rng = np.random.default_rng(seed)
+        obs = [Observation(name="cold-app", clock=clocks[i], time_s=1.0,
+                           power_w=1.0, r_time=float(rng.normal(0.2, 0.1)),
+                           r_power=float(rng.normal(-0.1, 0.05)))
+               for i in rng.choice(len(clocks), size=16)]
+        tables = []
+        for perm_seed in (1, 2):
+            store = ObservationStore()
+            order = np.random.default_rng(perm_seed).permutation(len(obs))
+            for j in order:
+                store.update(obs[j])
+            tables.append(RLSCorrector(store).correct(
+                "cold-app", clocks, P, T))
+        np.testing.assert_allclose(tables[0][1], tables[1][1], rtol=1e-9)
+        np.testing.assert_allclose(tables[0][0], tables[1][0], rtol=1e-9)
+
+
+# ---------------------------------------------------------------------- #
+#  Lifecycle + service integration
+# ---------------------------------------------------------------------- #
+class TestLifecycle:
+    def test_cold_to_warmed_promotion(self, testbed, fitted, app_feats):
+        svc = _service(testbed, fitted, app_feats)
+        synth = ColdStartSynthesizer(config=ColdStartConfig(warm_after=3))
+        svc.attach_synthesizer(synth)
+        app = _rand_app(np.random.default_rng(1), 0)
+        assert synth.status(app.name) == "unknown"
+        svc.note_app(app)
+        assert synth.status(app.name) == "cold"
+        for _ in range(3):
+            svc.invalidate(app.name)    # observation-driven invalidation
+        assert synth.status(app.name) == "warmed"
+        assert synth.stats.promotions == 1
+
+    def test_register_idempotent(self):
+        synth = ColdStartSynthesizer(dvfs=V5E_DVFS)
+        app = _rand_app(np.random.default_rng(2), 0)
+        assert synth.register(app)
+        assert not synth.register(app)
+        assert synth.stats.registered == 1
+
+    def test_note_app_noop_for_profiled(self, testbed, fitted, app_feats):
+        svc = _service(testbed, fitted, app_feats)
+        svc.attach_synthesizer(ColdStartSynthesizer())
+        assert not svc.note_app(APPS[0])    # profiled: zero-unseen no-op
+        assert svc.synthesizer.stats.registered == 0
+
+    def test_detach_restores_strictness(self, testbed, fitted, app_feats):
+        from repro.core import UnknownAppError
+        svc = _service(testbed, fitted, app_feats)
+        svc.attach_synthesizer(ColdStartSynthesizer())
+        app = _rand_app(np.random.default_rng(4), 0)
+        svc.note_app(app)
+        assert svc.base_table(app.name).source == "synthesized"
+        svc.detach_synthesizer()
+        with pytest.raises(UnknownAppError):
+            svc.table(app.name)
+
+    def test_mixed_stream_end_to_end(self, testbed, fitted, app_feats):
+        """Unseen apps mid-stream schedule without raising; their records
+        exist; synthesized tables were actually served (non-vacuity)."""
+        novel = [dataclasses.replace(APPS[i], name=f"novel-{i}",
+                                     seed=900 + i, core_eff=0.6)
+                 for i in range(3)]
+        jobs = list(stream_workload(APPS + novel, testbed, n_jobs=60,
+                                    seed=9, n_devices=2))
+        svc = _service(testbed, fitted, app_feats)
+        synth = ColdStartSynthesizer()
+        res = run_schedule(jobs, "min-energy", Testbed(seed=300),
+                           service=svc, n_devices=2, coldstart=synth)
+        assert len(res.records) == len(jobs)
+        assert synth.stats.registered == 3
+        assert svc.stats.synthesized_builds >= 1
+        assert {r.name for r in res.records} >= {a.name for a in novel}

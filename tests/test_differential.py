@@ -453,6 +453,151 @@ class TestCappedPreemption:
 
 
 # ---------------------------------------------------------------------- #
+#  Cold-start fuzz: mixed profiled/unseen app set (PR 8)
+# ---------------------------------------------------------------------- #
+def _mixed_jobs(seed: int, pool_idx: int, quantum: float) -> list[Job]:
+    """A stream interleaving the profiled corpus with never-profiled
+    variants (new names, divergent latents) the synthesizer must serve."""
+    f = _fixture()
+    _, _, n_dev = _POOLS[pool_idx]
+    rng = np.random.default_rng(seed)
+    novel = [dataclasses.replace(
+        APPS[i % len(APPS)], name=f"novel-{i}", seed=700 + i,
+        stall_frac=float(rng.uniform(0.2, 0.5)),
+        core_eff=float(rng.uniform(0.55, 0.85)))
+        for i in range(3)]
+    jobs = list(stream_workload(APPS + novel, f["testbed"], n_jobs=30,
+                                seed=seed, n_devices=n_dev))
+    return [dataclasses.replace(j, checkpoint_quantum=quantum)
+            for j in jobs]
+
+
+def _cold_run(jobs, pool_idx: int, policy: str, coordinator, preemption):
+    from repro.core import ColdStartSynthesizer
+    f = _fixture()
+    _, pool, n_dev = _POOLS[pool_idx]
+    synth = ColdStartSynthesizer()
+    r = run_schedule(
+        jobs, policy, Testbed(seed=1000),
+        predictor=f["predictor"], app_features=f["features"],
+        n_devices=n_dev, device_classes=pool,
+        power_coordinator=coordinator, preemption=preemption,
+        coldstart=synth)
+    return r, synth
+
+
+def _cold_coordinator(cap_kind: str, jobs, pool_idx: int, policy: str):
+    """Like _coordinator, but the headroom probe runs with a synthesizer
+    attached (the mixed stream is unschedulable without one)."""
+    if cap_kind == "none":
+        return None
+    if cap_kind == "inf":
+        return PowerCapCoordinator(math.inf, guard=0.15)
+    f = _fixture()
+    _, pool, n_dev = _POOLS[pool_idx]
+    r0, _ = _cold_run(jobs, pool_idx, policy, None, None)
+    if pool is not None:
+        led = PowerTelemetry.from_result(r0, pool=pool)
+        idle = sum(c.idle_power() for c in pool)
+    else:
+        idle_w = f["testbed"].idle_power()
+        led = PowerTelemetry.from_result(r0, idle_powers=idle_w,
+                                         n_devices=n_dev)
+        idle = idle_w * n_dev
+    cap = idle + 0.6 * max(led.peak_w - idle, 1.0)
+    return PowerCapCoordinator(cap, grant_policy="slack-weighted",
+                               guard=0.15)
+
+
+class TestColdStartMixedFuzz:
+    """Random pool x policy x cap x preemption configurations on a mixed
+    profiled/unseen stream: the engine must admit unknown apps through the
+    synthesized tier and keep every structural invariant the profiled-only
+    fuzz pins — overlap-free devices, EDF dispatch among admitted jobs,
+    and exact energy/work conservation."""
+
+    def _check_structure(self, jobs, r):
+        # every job executes; per-job work sums to 1 with one final record
+        by_job: dict[int, list] = {}
+        for rec in r.records:
+            by_job.setdefault(rec.job_id, []).append(rec)
+        assert sorted(by_job) == sorted(j.job_id for j in jobs)
+        for jid, recs in by_job.items():
+            recs.sort(key=lambda x: x.start)
+            assert math.fsum(x.work_frac for x in recs) == pytest.approx(
+                1.0, abs=1e-9), jid
+            assert [x.preempted for x in recs] == \
+                [True] * (len(recs) - 1) + [False]
+        # energy-conserving: billed energy decomposes exactly
+        for rec in r.records:
+            assert rec.energy_j == pytest.approx(
+                rec.time_s * rec.power_w + rec.overhead_j, rel=1e-12)
+        # overlap-free: per-device busy spans never intersect
+        by_dev: dict[int, list] = {}
+        for rec in r.records:
+            by_dev.setdefault(rec.device, []).append((rec.start, rec.end))
+        for spans in by_dev.values():
+            spans.sort()
+            for (_, e1), (s2, _) in zip(spans, spans[1:]):
+                assert s2 >= e1 - 1e-9
+
+    def _check_edf(self, jobs, r):
+        """EDF-among-admitted: when job b started while job a was already
+        pending (arrived, unstarted) with an earlier deadline, the engine
+        would have dispatched a first — so no such pair may exist."""
+        starts = {rec.job_id: rec.start for rec in r.records
+                  if rec.segment == 0}
+        by_id = {j.job_id: j for j in jobs}
+        order = sorted(starts.items(), key=lambda kv: kv[1])
+        for i, (jb, sb) in enumerate(order):
+            for ja, sa in order[i + 1:]:
+                a, b = by_id[ja], by_id[jb]
+                if a.arrival <= sb and sa > sb:
+                    assert a.deadline >= b.deadline - 1e-9, (ja, jb)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 50),
+           pool_idx=st.integers(0, len(_POOLS) - 1),
+           policy=st.sampled_from(list(POLICY_NAMES)))
+    def test_uncapped_nonpreemptive_invariants(self, seed, pool_idx,
+                                               policy):
+        jobs = _mixed_jobs(seed, pool_idx, 0.0)
+        r, synth = _cold_run(jobs, pool_idx, policy, None, None)
+        assert synth.stats.registered == 3       # unseen apps really served
+        assert {rec.name for rec in r.records} >= {
+            f"novel-{i}" for i in range(3)}
+        self._check_structure(jobs, r)
+        self._check_edf(jobs, r)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 50),
+           pool_idx=st.integers(0, len(_POOLS) - 1),
+           policy=st.sampled_from(["min-energy", "d-dvfs", "risk-aware"]),
+           cap_kind=st.sampled_from(list(_CAPS)),
+           preempt=st.sampled_from([False, True]),
+           quantum=st.floats(0.05, 1.5))
+    def test_capped_preemptive_invariants(self, seed, pool_idx, policy,
+                                          cap_kind, preempt, quantum):
+        jobs = _mixed_jobs(seed, pool_idx, quantum)
+        coord = _cold_coordinator(cap_kind, jobs, pool_idx, policy)
+        mgr = PreemptionManager(_ARMED) if preempt else None
+        r, synth = _cold_run(jobs, pool_idx, policy, coord, mgr)
+        assert synth.stats.registered == 3
+        self._check_structure(jobs, r)
+
+    def test_identity_with_trigger_disabled_manager(self):
+        """The PR 5 differential net extends to the cold tier: a mixed
+        stream through the segmented-but-never-preempting engine is
+        bit-identical to the plain engine, synthesizer attached both
+        times."""
+        jobs = _mixed_jobs(7, 1, 0.2)
+        a, _ = _cold_run(jobs, 1, "min-energy", None, None)
+        b, _ = _cold_run(jobs, 1, "min-energy", None,
+                         PreemptionManager(_OFF))
+        _assert_identical(a, b)
+
+
+# ---------------------------------------------------------------------- #
 #  BudgetManager.snapshot/restore: rollbacks compose under interleavings
 # ---------------------------------------------------------------------- #
 class TestBudgetRollback:

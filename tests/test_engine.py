@@ -243,6 +243,31 @@ class TestPredictionService:
         np.testing.assert_allclose(t_k.P, t_np.P, rtol=2e-4)
         np.testing.assert_allclose(t_k.T, t_np.T, rtol=2e-4)
 
+    def test_unknown_app_error_carries_suggestion(self, fitted, app_feats):
+        """PR 8 small fix: unknown apps raise a typed UnknownAppError
+        (KeyError-compatible) naming the nearest profiled app."""
+        from repro.core import UnknownAppError
+        svc = self._service(fitted, app_feats)
+        with pytest.raises(UnknownAppError,
+                           match=r"unknown app 'GEM'.*no cold-start "
+                                 r"synthesizer.*nearest profiled app: "
+                                 r"'GEMM'") as exc:
+            svc.table("GEM")
+        assert isinstance(exc.value, KeyError)   # back-compat catch sites
+        assert exc.value.name == "GEM"
+        assert exc.value.suggestion == "GEMM"
+        # point predictions raise the same typed error
+        with pytest.raises(UnknownAppError):
+            svc.t_min("GEM")
+
+    def test_unknown_app_error_with_empty_corpus(self, fitted):
+        from repro.core import UnknownAppError
+        svc = PredictionService(V5E_DVFS, predictor=fitted, app_features={})
+        with pytest.raises(UnknownAppError,
+                           match="no profiled apps at all") as exc:
+            svc.resolve("anything")
+        assert exc.value.suggestion is None
+
 
 # ---------------------------------------------------------------------- #
 #  EventEngine

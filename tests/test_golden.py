@@ -27,11 +27,12 @@ import pytest
 
 from repro.configs.paper_suite import PAPER_APPS
 from repro.core import (AdmissionController, BEST_EFFORT_TIER,
-                        EnergyTimePredictor, Job, PowerCapCoordinator,
-                        PredictorConfig, PreemptionManager, SLO_TIER,
-                        Testbed, build_dataset, make_workload,
-                        multi_tenant_workload, profile_features,
-                        rescue_stress_workload, run_schedule)
+                        ColdStartSynthesizer, EnergyTimePredictor, Job,
+                        PowerCapCoordinator, PredictorConfig,
+                        PreemptionManager, SLO_TIER, Testbed, build_dataset,
+                        make_workload, multi_tenant_workload,
+                        profile_features, rescue_stress_workload,
+                        run_schedule)
 from repro.core.gbdt import GBDTParams
 from repro.core.policies import POLICY_NAMES
 
@@ -96,6 +97,16 @@ TEN_SHED_LOOKAHEAD = 20.0
 TEN_SHED_THRESHOLD = 0.5
 TEN_RESCUE_JOBS = 3
 TEN_RESCUE_QUANTUM = 0.2
+
+#: Cold-start canonical scenario (PR 8): the seed-0 canonical workload
+#: with the last ``COLD_HELDOUT`` paper apps' feature vectors *withheld*
+#: from the service and a default :class:`ColdStartSynthesizer` attached —
+#: the held-out apps dispatch on synthesized clock-ladders (κ transferred
+#: from the profiled 8-app corpus), pinning the whole cold tier (static
+#: embedding → nearest-profiled mapping → ladder synthesis → engine
+#: admission) against silent drift.
+COLD_KEY = "min-energy|coldstart|0"
+COLD_HELDOUT = 4
 _GBDT = dict(iterations=80, depth=3, learning_rate=0.15)
 PREDICTOR_CONFIG = PredictorConfig(
     gbdt=GBDTParams(l2_leaf_reg=5.0, **_GBDT),
@@ -166,6 +177,9 @@ def compute_traces() -> dict:
     for key, (res, _) in _tenant_runs().items():
         trace = trace_of(res.records)
         out[key] = {"digest": digest_of(trace), "records": trace}
+    res, _ = _coldstart_run()
+    trace = trace_of(res.records)
+    out[COLD_KEY] = {"digest": digest_of(trace), "records": trace}
     _CACHE["traces"] = out
     return out
 
@@ -251,6 +265,24 @@ def _tenant_runs() -> dict:
                      preemption=mgr), mgr)
     _CACHE["tenants"] = out
     return out
+
+
+def _coldstart_run():
+    """The cold-start canonical run, cached with its synthesizer so the
+    gate tests can assert non-vacuity (held-out apps really dispatched
+    from synthesized tables)."""
+    if "coldstart" not in _CACHE:
+        f = _fixture()
+        held_out = {a.name for a in f["apps"][-COLD_HELDOUT:]}
+        profiled = {n: v for n, v in f["features"].items()
+                    if n not in held_out}
+        synth = ColdStartSynthesizer()
+        jobs = make_workload(f["apps"], f["testbed"], seed=0)
+        r = run_schedule(jobs, "min-energy", Testbed(seed=100),
+                         predictor=f["predictor"], app_features=profiled,
+                         coldstart=synth)
+        _CACHE["coldstart"] = (r, synth)
+    return _CACHE["coldstart"]
 
 
 def load_golden() -> dict:
@@ -379,12 +411,42 @@ def test_tenant_golden_scenarios_not_vacuous():
     assert not final[0].met_deadline
 
 
+def test_coldstart_golden_trace():
+    """The cold-start canonical run == its checked-in trace — the
+    synthesized-tier (embedding / κ-transfer / ladder synthesis /
+    admission) drift gate."""
+    golden = load_golden()["traces"][COLD_KEY]
+    fresh = compute_traces()[COLD_KEY]
+    for i, (got, want) in enumerate(zip(fresh["records"],
+                                        golden["records"])):
+        assert got == want, (
+            f"{COLD_KEY} record {i} drifted "
+            f"(columns: {_COLUMNS}):\n got {got}\nwant {want}")
+    assert len(fresh["records"]) == len(golden["records"])
+    assert fresh["digest"] == golden["digest"]
+
+
+def test_coldstart_golden_not_vacuous():
+    """The held-out apps must really be served from synthesized tables
+    (>= 1 synthesized-table dispatch) and the cold trace must differ from
+    the fully-profiled ``min-energy|0`` trace — otherwise the gate
+    silently stops covering the cold tier."""
+    f = _fixture()
+    r, synth = _coldstart_run()
+    assert synth.stats.registered == COLD_HELDOUT
+    assert synth.stats.synthesized_tables > 0
+    held_out = {a.name for a in f["apps"][-COLD_HELDOUT:]}
+    assert {rec.name for rec in r.records} >= held_out
+    g = load_golden()["traces"]
+    assert g[COLD_KEY]["digest"] != g["min-energy|0"]["digest"]
+
+
 def test_golden_file_is_self_consistent():
     """Stored digests match the stored records (catches hand-edits)."""
     g = load_golden()
     expected = {f"{p}|{s}" for p in POLICY_NAMES for s in SEEDS}
     expected |= {CAP_KEY, PRE_FIRE_KEY, PRE_DECLINE_KEY,
-                 TEN_SHED_KEY, TEN_RESCUE_KEY}
+                 TEN_SHED_KEY, TEN_RESCUE_KEY, COLD_KEY}
     assert set(g["traces"]) == expected
     for key, entry in g["traces"].items():
         assert digest_of(entry["records"]) == entry["digest"], key
