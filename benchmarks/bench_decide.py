@@ -22,7 +22,12 @@ bit-identity oracle. This bench measures exactly that trade on 100k-job /
 * ``coldstart``     — classless pool on a stream where a third of the
   jobs come from never-profiled apps served by synthesized clock-ladders
   (PR 8): cold-table resolution must ride the same batched prefetch and
-  scalar-identity contract as profiled tables.
+  scalar-identity contract as profiled tables;
+* ``federation``    — classless pool split across a 2-rack facility
+  hierarchy (PR 9): demand-weighted cap rebalancing and hierarchical
+  grant escalation happen *around* dispatch (advance/commit), so the
+  federated coordinator must preserve the scalar/batched identity
+  contract and stay on the vectorized fast path.
 
 Every scenario runs the *same* job stream twice — ``batch_decide=False``
 (scalar oracle) then ``batch_decide=True`` — asserts the two record
@@ -58,8 +63,8 @@ import numpy as np
 
 from benchmarks.bench_coldstart import novel_apps
 from benchmarks.common import csv, fixtures, write_bench_json
-from repro.core import (ColdStartSynthesizer, PredictionService,
-                        PowerCapCoordinator, RiskAware,
+from repro.core import (ColdStartSynthesizer, FacilityCoordinator,
+                        PredictionService, PowerCapCoordinator, RiskAware,
                         V5E_CLASS, V5E_DVFS, V5LITE_CLASS, V5P_CLASS,
                         heterogeneous_workload, make_device_pool,
                         multi_tenant_workload, run_schedule,
@@ -110,15 +115,22 @@ def _warm_tables(svc: PredictionService, f, pool) -> None:
             svc.table(app.name, cls)
 
 
-def _scenario(f, svc, name: str, jobs: list, pool, cap_w) -> dict:
-    """One scenario: scalar oracle run, batched run, identity + timing."""
+def _scenario(f, svc, name: str, jobs: list, pool, cap_w,
+              coord_fn=None) -> dict:
+    """One scenario: scalar oracle run, batched run, identity + timing.
+
+    ``coord_fn`` (fresh-coordinator factory) overrides the default bare
+    :class:`PowerCapCoordinator` so hierarchy variants reuse the same
+    identity + timing harness."""
     results = {}
     times = {}
     for label, bd in (("scalar", False), ("batched", True)):
         kw = {}
         if pool is not None:
             kw["device_classes"] = pool
-        if cap_w is not None:
+        if coord_fn is not None:
+            kw["power_coordinator"] = coord_fn()
+        elif cap_w is not None:
             kw["power_coordinator"] = PowerCapCoordinator(
                 cap_w, grant_policy="greedy-edf")
         policy = ("min-energy" if pool is None
@@ -154,7 +166,7 @@ def _scenario(f, svc, name: str, jobs: list, pool, cap_w) -> dict:
 
 
 def run_scenarios(f, n_jobs: int) -> dict:
-    """All four scenarios on fresh n_jobs-sized streams."""
+    """Every scenario on fresh n_jobs-sized streams."""
     tb, apps = f["testbed"], f["apps"]
     pool = make_device_pool(*POOL_SPEC)
     out = {}
@@ -166,6 +178,16 @@ def run_scenarios(f, n_jobs: int) -> dict:
     out["uniform"] = _scenario(f, svc, "uniform", uni, None, None)
     out["uniform_cap"] = _scenario(f, svc, "uniform_cap", uni, None,
                                    _cap_w(f, None))
+    # same capped stream through the 2-rack facility hierarchy: cap
+    # rebalancing + escalation live outside the dispatch decision, so
+    # scalar/batched identity must survive the federation untouched
+    fed_cap = _cap_w(f, None)
+    out["federation"] = _scenario(
+        f, svc, "federation", uni, None, fed_cap,
+        coord_fn=lambda: FacilityCoordinator(
+            fed_cap, (N_DEVICES // 2, N_DEVICES // 2),
+            share_policy="demand-weighted", escalation=True,
+            grant_policy="greedy-edf"))
     # mild sustained contention so tier-priority keys actually reorder a
     # live queue, but the stream still drains at dispatch-dominated pace
     ten = list(multi_tenant_workload(apps, tb, n_jobs=n_jobs, seed=1,

@@ -51,6 +51,9 @@ BENCHES = [
     ("coldstart", "benchmarks.bench_coldstart",
      "Beyond paper: cold-start clock-ladder synthesis — novel-app stream, "
      "synthesized+corrected vs fully-profiled oracle regret"),
+    ("federation", "benchmarks.bench_federation",
+     "Beyond paper: hierarchical multi-rack federation — facility cap "
+     "splits, grant escalation, straggler-driven cross-rack rescue"),
     ("kernels", "benchmarks.bench_kernels",
      "Kernel micro-benchmarks"),
     ("roofline", "benchmarks.bench_roofline",

@@ -32,6 +32,9 @@ python -m benchmarks.bench_tenants --smoke
 echo "=== smoke: cold-start synthesis gate ==="
 python -m benchmarks.bench_coldstart --smoke
 
+echo "=== smoke: multi-rack federation gate ==="
+python -m benchmarks.bench_federation --smoke
+
 echo "=== smoke: vectorized decision core + perf regression gate ==="
 DECIDE_JSON="$(mktemp /tmp/bench_decide_smoke.XXXXXX.json)"
 python -m benchmarks.bench_decide --smoke --json "$DECIDE_JSON"

@@ -57,7 +57,20 @@ def main() -> None:
                         f"with the last {test_golden.COLD_HELDOUT} paper "
                         "apps' feature vectors withheld, min-energy, "
                         "1 device, default ColdStartSynthesizer (held-out "
-                        "apps dispatch on synthesized clock-ladders)",
+                        "apps dispatch on synthesized clock-ladders); "
+                        f"plus {test_golden.FED_KEY!r}: "
+                        f"{test_golden.FED_JOBS}-job "
+                        "multi_rack_workload(seed=0, utilization="
+                        f"{test_golden.FED_UTIL}), min-energy, "
+                        f"{test_golden.FED_DEVICES} devices in racks "
+                        f"{list(test_golden.FED_RACKS)}, "
+                        f"{test_golden.FED_CAP_W:.0f}W FacilityCoordinator "
+                        "(demand-weighted, escalation, guard "
+                        f"{test_golden.FED_GUARD}), "
+                        "FederatedPreemptionManager with device "
+                        f"slowdown {test_golden.FED_SLOWDOWN} on the "
+                        "testbed ladder (escalations + a cross-rack "
+                        "migration fire)",
             "regen": "PYTHONPATH=src python scripts/regen_golden.py",
             "columns": list(test_golden._COLUMNS),
         },

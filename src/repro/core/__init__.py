@@ -16,8 +16,9 @@ from .workload import (BATCH_TIER, BEST_EFFORT_TIER, DEFAULT_TIER, Job,
                        SLO_TIER, TIERS, TierSpec, cap_stress_workload,
                        drift_profile, drifting_workload, edf_key,
                        heterogeneous_workload, make_device_pool,
-                       make_workload, multi_tenant_workload,
-                       rescue_stress_workload, stream_workload)
+                       make_workload, multi_rack_workload,
+                       multi_tenant_workload, rescue_stress_workload,
+                       stream_workload)
 from .admission import AdmissionController, AdmissionStats
 from .prediction_service import (ClockTable, PredictionService, ServiceStats,
                                  StackedTable, UnknownAppError,
@@ -37,6 +38,10 @@ from .powercap import (GRANT_POLICIES, CoordinatorStats, PowerCapCoordinator,
                        PowerSegment, PowerTelemetry)
 from .preemption import (PreemptionConfig, PreemptionManager,
                          PreemptionStats)
+from .federation import (FACILITY_SHARE_POLICIES, FacilityCoordinator,
+                         FacilityStats, FederatedPreemptionManager,
+                         FederatedStats, MigrationCostModel,
+                         RackCoordinator, RackTopology)
 
 __all__ = [
     "ClockPair", "DVFSConfig", "V5E_DVFS",
@@ -67,4 +72,7 @@ __all__ = [
     "TierSpec", "SLO_TIER", "BATCH_TIER", "BEST_EFFORT_TIER", "DEFAULT_TIER",
     "TIERS", "edf_key", "multi_tenant_workload",
     "AdmissionController", "AdmissionStats",
+    "FACILITY_SHARE_POLICIES", "FacilityCoordinator", "FacilityStats",
+    "FederatedPreemptionManager", "FederatedStats", "MigrationCostModel",
+    "RackCoordinator", "RackTopology", "multi_rack_workload",
 ]

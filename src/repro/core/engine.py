@@ -173,6 +173,16 @@ class ExecutionRecord:
     #: stays ``==``-identical to the tierless engine regardless of which
     #: tier label the jobs carry.
     tier: str | None = dataclasses.field(default=None, compare=False)
+    #: Federation provenance (PR 9), defaults on non-federated runs:
+    #: ``rack`` is the rack index of the dispatching device when the
+    #: coordinator or preemption manager knows the rack topology (None
+    #: otherwise), and ``migrated`` marks a remnant segment that resumed
+    #: on a *different rack* than the one its checkpoint was taken on —
+    #: its ``overhead_s``/``overhead_j`` include the checkpoint-transfer
+    #: seconds and joules the migration-cost model billed. compare=False,
+    #: like every provenance field.
+    rack: int | None = dataclasses.field(default=None, compare=False)
+    migrated: bool = dataclasses.field(default=False, compare=False)
 
 
 @dataclasses.dataclass
@@ -201,6 +211,23 @@ class ScheduleResult:
     @property
     def preemptions(self) -> int:
         return sum(r.preempted for r in self.records)
+
+    @property
+    def migrations(self) -> int:
+        """Cross-rack remnant resumes (PR 9): segments whose checkpoint
+        was taken on one rack and restored on another. Zero on every
+        non-federated run — same conservation discipline as
+        :attr:`preemptions` (Σ ``work_frac`` per job stays exactly 1 even
+        when its segments span racks)."""
+        return sum(r.migrated for r in self.records)
+
+    def migrations_by_rack(self) -> dict[int, int]:
+        """Cross-rack resumes keyed by *destination* rack index."""
+        out: dict[int, int] = {}
+        for r in self.records:
+            if r.migrated and r.rack is not None:
+                out[r.rack] = out.get(r.rack, 0) + 1
+        return out
 
     @property
     def shed_count(self) -> int:
@@ -728,6 +755,9 @@ class EventEngine:
         if coord is not None:
             coord.reset(self._idle_powers(), t_min_fn=self._coord_t_min_fn(),
                         device_classes=self.device_classes)
+        # rack provenance (PR 9): a federation-aware coordinator maps
+        # device -> rack; plain coordinators leave records rack-less
+        rack_fn = None if coord is None else getattr(coord, "rack_of", None)
         adm = self.admission
         if adm is not None:
             adm.reset(self)
@@ -868,6 +898,7 @@ class EventEngine:
                               else chosen_class.name),
                 power_peak_w=None if coord is None else meas.power_w,
                 tier=job.tier.name,
+                rack=None if rack_fn is None else rack_fn(dev),
             )
             if coord is not None:
                 # the coordinator fills rec.power_grant_w and keeps it in
@@ -925,6 +956,12 @@ class EventEngine:
             coord.reset(self._idle_powers(), t_min_fn=self._coord_t_min_fn(),
                         device_classes=self.device_classes)
         pre.reset()
+        # rack provenance (PR 9): the coordinator's topology wins, the
+        # manager's is the fallback (federated manager without a facility
+        # coordinator); both absent leaves records rack-less
+        rack_fn = ((None if coord is None
+                    else getattr(coord, "rack_of", None))
+                   or getattr(pre, "rack_of", None))
         adm = self.admission
         if adm is not None:
             adm.reset(self)
@@ -1054,8 +1091,13 @@ class EventEngine:
                     # instead of dispatching in place: another device's
                     # event inside the checkpoint window must be
                     # processed first, or a tighter-deadline job could
-                    # start late on the wrong device
-                    heapq.heappush(free, (rec.end, dev))
+                    # start late on the wrong device. A federation-aware
+                    # manager may instead quarantine a degraded device
+                    # (rescue-migration): it never rejoins the heap, so
+                    # the remnant must land elsewhere. The base manager
+                    # always answers False — identical control flow.
+                    if not pre.retire(reason, dev):
+                        heapq.heappush(free, (rec.end, dev))
                     continue
                 else:
                     # ---- completion (or a stale boundary of a segment
@@ -1106,6 +1148,17 @@ class EventEngine:
                 running=running, finalize=finalize)
             clock, plan_w = self._choose_clock(sel, tab, run_dvfs, coord,
                                                grant)
+            # straggler mitigation (PR 9): a federation-aware manager may
+            # boost a flagged device's committed clock one ladder rung.
+            # The base manager returns `clock` itself — the identity check
+            # is on the object, so the untouched path recomputes nothing.
+            boosted = pre.mitigate_clock(dev, clock, run_dvfs)
+            if boosted is not clock:
+                clock = boosted
+                if coord is not None:
+                    plan_w = self._planned_power(
+                        sel, clock, tab,
+                        self.testbed.dvfs if run_dvfs is None else run_dvfs)
             if coord is not None:
                 if plan_w * (1 + coord.guard) > grant + 1e-9:
                     # power deferral, exactly as in the plain loop
@@ -1125,8 +1178,34 @@ class EventEngine:
             meas = self._measure(job.app, clock, rng, run_dvfs)
             restore_s = cfg.restore_s if job.segment > 0 else 0.0
             restore_j = cfg.restore_j if job.segment > 0 else 0.0
-            seg_time = job.work_frac * meas.time_s + restore_s
+            # degradation truth (PR 9): a degraded device stretches the
+            # realized compute time (same draw, more seconds). slow == 1.0
+            # (the base manager, and every healthy device) skips the
+            # multiply entirely — bit-identical floats.
+            full_time = meas.time_s
+            slow = pre.slowdown_of(dev)
+            if slow != 1.0:
+                full_time = meas.time_s * slow
+            # cross-rack migration billing (PR 9): a remnant resuming on
+            # a different rack than its checkpoint pays the transfer in
+            # seconds (at the device's draw) and explicit joules, folded
+            # into the restore overhead. The base manager reports no
+            # source rack, so nothing is ever added.
+            migrated = False
+            if job.segment > 0:
+                mig_s, mig_j, src_rack = pre.migration_cost(job, dev)
+                if src_rack is not None:
+                    migrated = True
+                    restore_s += mig_s
+                    restore_j += mig_j
+            seg_time = job.work_frac * full_time + restore_s
             end = start + seg_time
+            # telemetry feed (PR 9): observed compute seconds (transfer
+            # excluded — the monitor must not flag a healthy destination
+            # device for its predecessor's migration) vs the prediction.
+            pre.note_step(dev, job.work_frac * full_time
+                          + (cfg.restore_s if job.segment > 0 else 0.0),
+                          sel.time)
             rec = ExecutionRecord(
                 job_id=job.job_id, name=job.name, arrival=job.arrival,
                 deadline=job.deadline, start=start, end=end, device=dev,
@@ -1141,6 +1220,8 @@ class EventEngine:
                 work_frac=job.work_frac, segment=job.segment,
                 overhead_s=restore_s, overhead_j=restore_j,
                 tier=job.tier.name,
+                rack=None if rack_fn is None else rack_fn(dev),
+                migrated=migrated,
             )
             if coord is not None:
                 coord.commit(
@@ -1155,7 +1236,7 @@ class EventEngine:
                 class_key=(None if chosen_class is None
                            else chosen_class.name),
                 clock=clock, exec_start=start + restore_s, end=end,
-                full_time_s=meas.time_s, quantum=pre.quantum_of(job),
+                full_time_s=full_time, quantum=pre.quantum_of(job),
                 grant=grant)
             if self.feedback is not None:
                 seg.fb_seq = fb_seq

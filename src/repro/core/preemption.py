@@ -122,6 +122,9 @@ class PreemptionStats:
     #                             inside queue_rescues, not in addition)
     cap_rescues: int = 0        # self-rescues needing a bigger power grant
     migrations: int = 0         # resumes that landed on a different class
+    rack_migrations: int = 0    # resumes that landed on a different rack
+    #                             (PR 9 — only a federation-aware manager
+    #                             ever marks a record migrated)
     resumes: int = 0            # remnant segments dispatched
     overhead_s: float = 0.0     # total checkpoint+restore seconds billed
     overhead_j: float = 0.0     # total explicit checkpoint+restore joules
@@ -133,6 +136,7 @@ class PreemptionStats:
                 f"cap={self.cap_rescues}) "
                 f"declined={self.declined} resumes={self.resumes} "
                 f"migrations={self.migrations} "
+                f"rack_migrations={self.rack_migrations} "
                 f"overhead={self.overhead_s:.2f}s/{self.overhead_j:.0f}J")
 
 
@@ -160,15 +164,18 @@ class PreemptionManager:
         self.stats = PreemptionStats()
         self._lidx: dict[Optional[str], dict] = {}
         self._prev_class: dict[int, Optional[str]] = {}
+        self._prev_dev: dict[int, int] = {}
 
     def reset(self) -> None:
         self.stats = PreemptionStats()
         self._lidx.clear()
         self._prev_class.clear()
+        self._prev_dev.clear()
 
     def note_preempt(self, remnant: Job, seg) -> None:
         """Remember where the remnant came from (migration accounting)."""
         self._prev_class[id(remnant)] = seg.class_key
+        self._prev_dev[id(remnant)] = seg.dev
 
     def note_resume(self, job: Job, record) -> None:
         """A remnant was re-dispatched; bill its restore overhead and
@@ -178,6 +185,46 @@ class PreemptionManager:
         self.stats.overhead_j += record.overhead_j
         if self._prev_class.pop(id(job), None) != record.device_class:
             self.stats.migrations += 1
+        self._prev_dev.pop(id(job), None)
+        if getattr(record, "migrated", False):
+            self.stats.rack_migrations += 1
+
+    # -- federation hooks (PR 9) ---------------------------------------- #
+    # The engine drives these at every dispatch/boundary; the base manager
+    # answers with the identity on each one, so a non-federated run never
+    # changes a float — the same lever-off contract as every other
+    # subsystem. :class:`~repro.core.federation.FederatedPreemptionManager`
+    # overrides them with StragglerMonitor-driven detection, degradation
+    # truth, migration billing, and device quarantine.
+    def slowdown_of(self, dev: int) -> float:
+        """Multiplicative execution-time degradation of device ``dev``
+        (truth side). 1.0 = healthy; the engine multiplies realized
+        compute time by this factor."""
+        return 1.0
+
+    def mitigate_clock(self, dev: int, clock, dvfs):
+        """Chance to override the committed clock for a dispatch on
+        ``dev`` (e.g. a straggler-mitigation boost). Must return ``clock``
+        itself — the same object — when not intervening; the engine keys
+        its recompute on identity, not equality."""
+        return clock
+
+    def migration_cost(self, job: Job, dev: int):
+        """``(seconds, joules, source_rack)`` a remnant re-dispatch on
+        ``dev`` pays for moving its checkpoint. ``source_rack`` None means
+        no cross-rack move (and the zero costs are not billed at all)."""
+        return (0.0, 0.0, None)
+
+    def note_step(self, dev: int, observed_s: float,
+                  predicted_s: Optional[float]) -> None:
+        """Telemetry feed: one dispatched segment's observed compute
+        seconds vs its predicted seconds on ``dev``. No-op here."""
+
+    def retire(self, reason: str, dev: int) -> bool:
+        """After a preemption fired with ``reason``, may the engine
+        permanently quarantine ``dev`` (True = do not re-enter the free
+        heap)? The base manager never retires a device."""
+        return False
 
     # -- remnant lenses ------------------------------------------------- #
     def quantum_of(self, job: Job) -> Optional[float]:

@@ -151,7 +151,13 @@ def run_schedule(
     cluster-wide power cap — every dispatch is granted a per-device power
     budget and the clock ladder is filtered to clocks fitting the grant.
     ``None`` (default) and cap=∞ both reproduce the capless engine
-    bit-identically.
+    bit-identically. A :class:`~repro.core.federation.FacilityCoordinator`
+    (PR 9) plugs into the same slot: the facility splits its cap into
+    per-rack :class:`~repro.core.powercap.PowerCapCoordinator` slices and
+    escalates grants hierarchically; a single-rack facility is
+    bit-identical to the bare coordinator it wraps. Pair it with a
+    :class:`~repro.core.federation.FederatedPreemptionManager` (as
+    ``preemption``) for straggler-driven cross-rack rescue migration.
 
     ``preemption``: a :class:`~repro.core.preemption.PreemptionManager` —
     jobs with a ``checkpoint_quantum`` become interruptible at segment

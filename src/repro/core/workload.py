@@ -29,7 +29,7 @@ __all__ = ["Job", "TierSpec", "SLO_TIER", "BATCH_TIER", "BEST_EFFORT_TIER",
            "stream_workload", "drifting_workload", "drift_profile",
            "make_device_pool", "heterogeneous_workload",
            "cap_stress_workload", "rescue_stress_workload",
-           "multi_tenant_workload"]
+           "multi_tenant_workload", "multi_rack_workload"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -311,6 +311,87 @@ def cap_stress_workload(
             slack = float(rng.uniform(*slack_range)) * t_cls
             yield Job(app=apps[idx], arrival=now, deadline=done + slack,
                       job_id=jid)
+            jid += 1
+
+
+def multi_rack_workload(
+    apps: list[AppProfile],
+    testbed: Testbed,
+    n_devices: int = 64,
+    n_jobs: int = 10_000,
+    seed: int = 0,
+    burst: int | None = None,
+    mean_interburst: float | None = None,
+    slack_range: tuple[float, float] = (0.08, 0.5),
+    utilization: float = 0.8,
+    quantum_frac: float = 0.25,
+    dvfs: DVFSConfig | None = None,
+    device_classes: list[DeviceClass] | None = None,
+):
+    """Bursty checkpointable stream for a federated multi-rack pool.
+
+    The federation stress case (:mod:`~repro.core.federation`): an
+    ``n_devices`` pool partitioned into racks by the facility
+    coordinator, fed **bursts** of ``burst`` simultaneous jobs (default:
+    half the pool). On a classless pool the engine's free-heap tie-break
+    dispatches each burst onto the *lowest-index* free devices, so
+    bursts pile onto the first racks while later racks idle; on an
+    explicit heterogeneous pool (``device_classes`` — positional, like
+    :func:`run_schedule`'s argument), joint placement concentrates work
+    on the classes worth running, while a **static** per-rack cap split
+    hands every device the *same* burn share — starving racks of
+    power-hungry fast devices while racks of low-draw devices sit on
+    watts they physically cannot burn. Both imbalances are precisely
+    what demand-weighted rebalancing, hierarchical grant escalation,
+    and cross-rack migration exist to fix.
+
+    Deadlines keep :func:`cap_stress_workload`'s DC-anchoring guarantee
+    (virtual default-clock schedule over the whole pool — per-class
+    default clocks when ``device_classes`` is given, tight
+    ``slack_range`` slack), so the uncapped pool-wide baseline stays
+    approximately schedulable at ``utilization`` — misses under a
+    facility cap are the cap split's doing, not an infeasible stream.
+    Every job carries ``checkpoint_quantum = quantum_frac × t_dc`` so
+    segments exist for the migration machinery to move. A generator in
+    nondecreasing arrival order, like every stream here.
+    """
+    rng = np.random.default_rng(seed)
+    if device_classes is not None:
+        n_devices = len(device_classes)
+    if burst is None:
+        burst = max(1, n_devices // 2)
+    if burst < 1:
+        raise ValueError("burst must be >= 1")
+    if device_classes is None:
+        d = dvfs or testbed.dvfs
+        t_dc_dev = [np.array([testbed.true_time(a, d.default_clock,
+                                                dvfs=dvfs)
+                              for a in apps])] * n_devices
+        rate = n_devices / float(t_dc_dev[0].mean())
+    else:
+        by_cls: dict[str, np.ndarray] = {}
+        for cls in device_classes:
+            if cls.name not in by_cls:
+                by_cls[cls.name] = np.array([
+                    testbed.true_time(a, cls.dvfs.default_clock,
+                                      dvfs=cls.dvfs) for a in apps])
+        t_dc_dev = [by_cls[cls.name] for cls in device_classes]
+        rate = sum(1.0 / float(t.mean()) for t in t_dc_dev)
+    if mean_interburst is None:
+        mean_interburst = burst / (rate * utilization)
+    dev_free = np.zeros(n_devices)
+    now, jid = 0.0, 0
+    while jid < n_jobs:
+        now += float(rng.exponential(mean_interburst))
+        for _ in range(min(burst, n_jobs - jid)):
+            idx = int(rng.integers(len(apps)))
+            dev = int(np.argmin(dev_free))      # virtual DC dispatch
+            t_a = float(t_dc_dev[dev][idx])
+            done = max(float(dev_free[dev]), now) + t_a
+            dev_free[dev] = done
+            slack = float(rng.uniform(*slack_range)) * t_a
+            yield Job(app=apps[idx], arrival=now, deadline=done + slack,
+                      job_id=jid, checkpoint_quantum=quantum_frac * t_a)
             jid += 1
 
 

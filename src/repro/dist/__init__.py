@@ -1,1 +1,12 @@
 """Distributed-substrate utilities: fault tolerance and compressed collectives."""
+from .fault_tolerance import (FailureInjector, RunnerConfig,
+                              SimulatedFailure, StragglerMonitor,
+                              TrainingRunner)
+
+__all__ = [
+    "SimulatedFailure",
+    "FailureInjector",
+    "RunnerConfig",
+    "TrainingRunner",
+    "StragglerMonitor",
+]

@@ -129,6 +129,13 @@ class StragglerMonitor:
         self.ema = self.ema_alpha * ratio + (1 - self.ema_alpha) * self.ema
         self.flagged = [int(i) for i in np.nonzero(
             self.ema > self.threshold)[0]]
+        # recovery resets the mitigation ladder: a replica whose EMA
+        # drops back under threshold starts from scratch if it ever
+        # degrades again (and can no longer trip should_evict on a stale
+        # max-clock boost)
+        for r in list(self.boosts):
+            if r not in self.flagged:
+                del self.boosts[r]
         return self.flagged
 
     def mitigation_clock(self, replica: int, current: ClockPair) -> ClockPair:

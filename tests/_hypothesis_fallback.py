@@ -3,7 +3,8 @@
 The test suite uses a small, fixed subset of the hypothesis API:
 ``@settings(max_examples=N, deadline=None)`` stacked (in either order) with
 ``@given(**strategies)`` and the strategies ``st.integers(lo, hi)``,
-``st.sampled_from(seq)`` and ``st.floats(lo, hi)``. This shim reproduces
+``st.sampled_from(seq)``, ``st.floats(lo, hi)`` and
+``st.lists(st.integers(lo, hi), min_size=, max_size=)``. This shim reproduces
 that subset with *deterministic* sampling (seeded numpy RNG), so property
 tests still exercise a spread of inputs on machines without the real
 library — and the suite **collects identically** with and without
@@ -69,8 +70,18 @@ def _floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
     return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
 
 
+def _lists(elements: _Strategy, min_size: int = 0,
+           max_size: int = 10) -> _Strategy:
+    def sample(rng: np.random.Generator):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.sample(rng) for _ in range(n)]
+
+    return _Strategy(sample)
+
+
 strategies = types.SimpleNamespace(
-    integers=_integers, sampled_from=_sampled_from, floats=_floats)
+    integers=_integers, sampled_from=_sampled_from, floats=_floats,
+    lists=_lists)
 
 
 def settings(max_examples: int = _DEFAULT_EXAMPLES, **kwargs):

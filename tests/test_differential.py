@@ -46,11 +46,12 @@ except ImportError:  # not installed in this container — deterministic shim
 
 from repro.configs.paper_suite import PAPER_APPS
 from repro.core import (
-    BATCH_TIER, BEST_EFFORT_TIER, DEFAULT_TIER, EnergyTimePredictor, Job,
+    BATCH_TIER, BEST_EFFORT_TIER, DEFAULT_TIER, EnergyTimePredictor,
+    FacilityCoordinator, FederatedPreemptionManager, Job,
     PowerCapCoordinator, PowerTelemetry, PredictorConfig, PreemptionConfig,
     PreemptionManager, SLO_TIER, Testbed, V5E_CLASS, V5E_DVFS, V5LITE_CLASS,
-    V5P_CLASS, build_dataset, profile_features, rescue_stress_workload,
-    run_schedule, stream_workload,
+    V5P_CLASS, build_dataset, multi_rack_workload, profile_features,
+    rescue_stress_workload, run_schedule, stream_workload,
 )
 from repro.core.gbdt import GBDTParams
 from repro.core.policies import (MinEnergy, POLICY_NAMES, QueueAwareBudget,
@@ -396,6 +397,87 @@ class TestConservation:
 
 # ---------------------------------------------------------------------- #
 #  Power cap x preemption: grants shrink at boundaries, ledger exact
+# ---------------------------------------------------------------------- #
+#  Federation (PR 9): cross-rack migration keeps conservation discipline
+# ---------------------------------------------------------------------- #
+def _federated_run(seed: int):
+    """A 2x2-device federation with one injected slow device: binding
+    facility cap, demand-weighted shares, straggler rescue armed."""
+    f = _fixture()
+    jobs = list(multi_rack_workload(APPS, f["testbed"], n_devices=4,
+                                    n_jobs=40, seed=seed))
+    r0 = run_schedule(jobs, "min-energy", Testbed(seed=1000),
+                      predictor=f["predictor"], app_features=f["features"],
+                      n_devices=4)
+    idle = f["testbed"].idle_power() * 4
+    led = PowerTelemetry.from_result(r0, idle_powers=f["testbed"].idle_power(),
+                                     n_devices=4)
+    fed = FacilityCoordinator(idle + 0.7 * max(led.peak_w - idle, 1.0),
+                              [2, 2], share_policy="demand-weighted",
+                              guard=0.15)
+    pre = FederatedPreemptionManager([2, 2], config=_ARMED,
+                                     dvfs=f["testbed"].dvfs,
+                                     device_slowdown={1: 2.5})
+    r = run_schedule(jobs, "min-energy", Testbed(seed=1000),
+                     predictor=f["predictor"], app_features=f["features"],
+                     n_devices=4, power_coordinator=fed, preemption=pre)
+    return jobs, r, fed, pre
+
+
+class TestFederatedMigration:
+    _cache: dict = {}
+
+    def _run(self, seed):
+        if seed not in self._cache:
+            self._cache[seed] = _federated_run(seed)
+        return self._cache[seed]
+
+    def test_conservation_spans_racks(self):
+        """Σ work_frac == 1 per job even when its segments land on
+        different racks; migrated segments are always remnants."""
+        for seed in range(3):
+            jobs, r, _, _ = self._run(seed)
+            by_job: dict[int, list] = {}
+            for rec in r.records:
+                by_job.setdefault(rec.job_id, []).append(rec)
+            assert sorted(by_job) == sorted(j.job_id for j in jobs)
+            for jid, recs in by_job.items():
+                assert math.fsum(x.work_frac for x in recs) == \
+                    pytest.approx(1.0, abs=1e-9), (seed, jid)
+            for rec in r.records:
+                if rec.migrated:
+                    assert rec.segment > 0
+                    assert rec.rack is not None
+
+    def test_migration_counters_consistent(self):
+        """``migrations`` == migrated records == Σ per-rack counts, and
+        each migrated segment really changed racks vs its predecessor."""
+        total = 0
+        for seed in range(3):
+            _, r, _, _ = self._run(seed)
+            migrated = [x for x in r.records if x.migrated]
+            assert r.migrations == len(migrated)
+            by_rack = r.migrations_by_rack()
+            assert sum(by_rack.values()) == r.migrations
+            prev_rack = {}
+            for rec in sorted(r.records, key=lambda x: (x.job_id,
+                                                        x.segment)):
+                if rec.migrated:
+                    assert prev_rack[rec.job_id] != rec.rack, rec
+                    assert by_rack.get(rec.rack, 0) > 0
+                prev_rack[rec.job_id] = rec.rack
+            total += r.migrations
+        assert total > 0  # the net is not vacuous
+
+    def test_plain_runs_report_zero_migrations(self):
+        """Non-federated schedules never invent migrations: counters are
+        zero and the per-rack map is empty (rack provenance absent)."""
+        _, r, _, _ = _preemptive_run(0, 2)
+        assert r.migrations == 0
+        assert r.migrations_by_rack() == {}
+        assert all(x.rack is None for x in r.records)
+
+
 # ---------------------------------------------------------------------- #
 class TestCappedPreemption:
     def test_granted_ledger_stays_under_cap_with_preemption(self):

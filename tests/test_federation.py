@@ -1,0 +1,485 @@
+"""Tests for the multi-rack federation subsystem (repro.core.federation):
+topology partition exactness, cap-transfer primitives, facility share
+splits and hierarchical escalation, single-rack ≡ bare-coordinator
+bit-identity across all six policies, the facility-cap-safety fuzz
+(granted-ledger peak ≤ cap for every racks × sizes × cap × grant-policy
+draw), and straggler quarantine/migration mechanics."""
+import functools
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # not installed in this container — deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.configs.paper_suite import PAPER_APPS
+from repro.core import (
+    FACILITY_SHARE_POLICIES, EnergyTimePredictor, FacilityCoordinator,
+    FederatedPreemptionManager, GRANT_POLICIES, MigrationCostModel,
+    POLICIES, PowerCapCoordinator, PowerTelemetry, PredictorConfig,
+    PreemptionConfig, RackTopology, Testbed, V5E_DVFS, build_dataset,
+    multi_rack_workload, profile_features, run_schedule,
+)
+from repro.core.dvfs import ClockPair
+from repro.core.gbdt import GBDTParams
+
+APPS = list(PAPER_APPS)[:6]
+SMALL = PredictorConfig(
+    gbdt=GBDTParams(iterations=60, depth=3, learning_rate=0.15,
+                    l2_leaf_reg=5.0),
+    gbdt_time=GBDTParams(iterations=60, depth=3, learning_rate=0.15,
+                         l2_leaf_reg=3.0),
+)
+
+
+@pytest.fixture(scope="module")
+def testbed():
+    return Testbed(seed=0)
+
+
+@pytest.fixture(scope="module")
+def fitted(testbed):
+    X, yp, yt, _ = build_dataset(APPS, testbed, seed=0)
+    return EnergyTimePredictor(SMALL).fit(X, yp, yt)
+
+
+@pytest.fixture(scope="module")
+def app_feats(testbed):
+    rng = np.random.default_rng(7)
+    return {a.name: profile_features(a, testbed, rng=rng) for a in APPS}
+
+
+@functools.lru_cache(maxsize=1)
+def _fixture():
+    """lru-cached twin of the module fixtures for the hypothesis fuzz —
+    the shim's ``given`` wrapper is signature-opaque to pytest, so fuzz
+    tests cannot take fixture arguments."""
+    tb = Testbed(seed=0)
+    X, yp, yt, _ = build_dataset(APPS, tb, seed=0)
+    rng = np.random.default_rng(7)
+    return {
+        "testbed": tb,
+        "predictor": EnergyTimePredictor(SMALL).fit(X, yp, yt),
+        "features": {a.name: profile_features(a, tb, rng=rng)
+                     for a in APPS},
+    }
+
+
+# ---------------------------------------------------------------------- #
+#  Topology: racks partition the pool (invariant 3)
+# ---------------------------------------------------------------------- #
+class TestRackTopology:
+    def test_partition_exact(self):
+        topo = RackTopology((2, 3, 1))
+        assert topo.n_racks == 3
+        assert topo.n_devices == 6
+        assert topo.offsets == (0, 2, 5)
+        seen = []
+        for r in range(topo.n_racks):
+            seen.extend(topo.devices_of(r))
+        # every device on exactly one rack, in global order
+        assert seen == list(range(6))
+        for d in range(6):
+            r = topo.rack_of(d)
+            assert d in topo.devices_of(r)
+            assert topo.local_of(d) == d - topo.offsets[r]
+
+    def test_out_of_range_raises(self):
+        topo = RackTopology((2, 2))
+        with pytest.raises(IndexError):
+            topo.rack_of(4)
+        with pytest.raises(IndexError):
+            topo.rack_of(-1)
+
+    def test_bad_sizes_raise(self):
+        with pytest.raises(ValueError):
+            RackTopology(())
+        with pytest.raises(ValueError):
+            RackTopology((2, 0))
+
+    @settings(max_examples=20, deadline=None)
+    @given(sizes=st.lists(st.integers(1, 7), min_size=1, max_size=5))
+    def test_partition_fuzz(self, sizes):
+        topo = RackTopology(tuple(sizes))
+        owners = [topo.rack_of(d) for d in range(topo.n_devices)]
+        # non-decreasing rack ids, each rack owns exactly its size
+        assert owners == sorted(owners)
+        for r, s in enumerate(sizes):
+            assert owners.count(r) == s
+
+
+# ---------------------------------------------------------------------- #
+#  Migration cost model
+# ---------------------------------------------------------------------- #
+class TestMigrationCostModel:
+    def test_zero_bytes_is_overhead_only(self):
+        m = MigrationCostModel()
+        secs, joules = m.cost(0.0)
+        assert secs == pytest.approx(m.overhead_s)
+        assert joules == 0.0
+
+    def test_linear_then_clamped(self):
+        m = MigrationCostModel(link_gbps=100.0, overhead_s=0.01,
+                               joules_per_gb=10.0, max_bytes=8e9)
+        s1, j1 = m.cost(1e9)
+        assert s1 == pytest.approx(0.01 + 8.0 / 100.0)
+        assert j1 == pytest.approx(10.0)
+        # hbm traffic far above resident state clamps at max_bytes
+        s_cap, j_cap = m.cost(8e9)
+        assert m.cost(500e9) == (pytest.approx(s_cap),
+                                 pytest.approx(j_cap))
+
+    def test_negative_bytes_clamped_to_zero(self):
+        m = MigrationCostModel()
+        assert m.cost(-5.0) == (pytest.approx(m.overhead_s), 0.0)
+
+
+# ---------------------------------------------------------------------- #
+#  Cap-transfer primitives on the rack coordinator
+# ---------------------------------------------------------------------- #
+class TestCapTransfer:
+    def _coord(self, cap=300.0, idle=(20.0, 20.0)):
+        c = PowerCapCoordinator(cap)
+        c.reset(list(idle))
+        return c
+
+    def test_release_cap_moves_only_free_headroom(self):
+        c = self._coord(cap=300.0)
+        got = c.release_cap(100.0)
+        assert got == pytest.approx(100.0)
+        assert c.cap_w == pytest.approx(200.0)
+        # headroom shrank by exactly what was released
+        assert c.headroom_w == pytest.approx(200.0 - c.allocated_w)
+
+    def test_release_cap_bounded_by_headroom(self):
+        c = self._coord(cap=300.0)
+        free = c.headroom_w
+        got = c.release_cap(1e9)
+        assert got == pytest.approx(free)
+        assert c.cap_w == pytest.approx(300.0 - free)
+        # nothing left to give
+        assert c.release_cap(10.0) == 0.0
+
+    def test_release_cap_infinite_or_nonpositive_noop(self):
+        c = PowerCapCoordinator(math.inf)
+        c.reset([20.0])
+        assert c.release_cap(50.0) == 0.0
+        c2 = self._coord()
+        assert c2.release_cap(0.0) == 0.0
+        assert c2.cap_w == pytest.approx(300.0)
+
+    def test_resize_below_allocations_raises(self):
+        c = self._coord(cap=300.0)
+        c.commit(0, 120.0, end=5.0, drawn_w=110.0)
+        with pytest.raises(ValueError):
+            c.resize_cap(c.allocated_w - 1.0)
+        # at or above allocations is fine
+        c.resize_cap(c.allocated_w)
+        assert c.cap_w == pytest.approx(c.allocated_w)
+
+    def test_reclaim_unused_returns_freed_watts(self):
+        c = self._coord(cap=400.0)
+        c.commit(0, 150.0, end=5.0, drawn_w=100.0)
+        # grant 150 but draw 100 → 50 W reclaimable above the measured
+        assert c.reclaimable_w == pytest.approx(50.0)
+        freed = c.reclaim_unused()
+        assert freed == pytest.approx(50.0)
+        assert c.reclaimable_w == 0.0
+
+
+# ---------------------------------------------------------------------- #
+#  Facility share splits
+# ---------------------------------------------------------------------- #
+class TestFacilityShares:
+    IDLE = [20.0] * 6
+
+    def _fac(self, cap, sizes, **kw):
+        fac = FacilityCoordinator(cap, sizes, **kw)
+        fac.reset(self.IDLE[:fac.n_devices])
+        return fac
+
+    @pytest.mark.parametrize("share", FACILITY_SHARE_POLICIES)
+    def test_split_sums_to_cap(self, share):
+        fac = self._fac(500.0, [2, 3, 1], share_policy=share)
+        caps = fac.caps()
+        assert math.fsum(caps) <= 500.0 + 1e-9
+        # every rack got at least its idle floor
+        for r, c in enumerate(caps):
+            assert c >= 20.0 * fac.topology.rack_sizes[r] - 1e-9
+
+    def test_single_rack_gets_cap_exactly(self):
+        cap = 313.7300000001
+        fac = self._fac(cap, [4])
+        assert fac.caps() == [cap]     # float-exact, no split arithmetic
+
+    def test_infinite_cap_propagates(self):
+        fac = self._fac(math.inf, [2, 2])
+        assert fac.caps() == [math.inf, math.inf]
+
+    def test_cap_below_idle_floor_raises(self):
+        fac = FacilityCoordinator(50.0, [2, 2])
+        with pytest.raises(ValueError):
+            fac.reset(self.IDLE[:4])   # idle floor is 80 W
+
+    def test_unknown_policies_raise(self):
+        with pytest.raises(ValueError):
+            FacilityCoordinator(100.0, [2], share_policy="nope")
+        with pytest.raises(ValueError):
+            FacilityCoordinator(100.0, [2], grant_policy="nope")
+        with pytest.raises(ValueError):
+            FacilityCoordinator(-1.0, [2])
+
+    def test_pool_size_mismatch_raises(self):
+        fac = FacilityCoordinator(500.0, [2, 2])
+        with pytest.raises(ValueError):
+            fac.reset([20.0] * 3)
+
+    @pytest.mark.parametrize("share", ("demand-weighted", "tier-weighted"))
+    def test_rebalance_preserves_cap_sum(self, share):
+        fac = self._fac(500.0, [2, 2, 2], share_policy=share)
+        # load rack 0 so rebalancing tilts headroom toward it
+        fac.commit(0, 100.0, end=10.0, drawn_w=90.0)
+        fac.commit(1, 100.0, end=10.0, drawn_w=90.0)
+        fac.advance(1.0)
+        assert fac.stats.rebalances >= 1
+        assert math.fsum(fac.caps()) <= 500.0 + 1e-9
+        # a loaded rack's floor (its allocations) is always covered
+        for rack in fac.racks:
+            assert rack.coord.cap_w >= rack.coord.allocated_w - 1e-9
+
+    def test_static_never_rebalances(self):
+        fac = self._fac(500.0, [2, 2, 2], share_policy="static")
+        before = fac.caps()
+        fac.commit(0, 100.0, end=10.0, drawn_w=90.0)
+        fac.advance(1.0)
+        assert fac.stats.rebalances == 0
+        # grants expire at advance(20) but caps stay the static split
+        fac.advance(20.0)
+        assert fac.caps() == before
+
+
+# ---------------------------------------------------------------------- #
+#  Hierarchical escalation
+# ---------------------------------------------------------------------- #
+class TestEscalation:
+    def _fac(self, **kw):
+        fac = FacilityCoordinator(400.0, [2, 2], share_policy="static",
+                                  **kw)
+        fac.reset([20.0] * 4)
+        return fac
+
+    def test_sibling_cap_moves_on_escalation(self):
+        fac = self._fac()
+        cap0, cap1 = fac.caps()
+        # rack 0 wants more than its whole slice
+        need = cap0 + 50.0
+        got = fac.escalate(0, need, start=0.0)
+        assert got >= need - 1e-9
+        assert fac.stats.escalations == 1
+        assert fac.stats.rescues == 1
+        assert fac.stats.transfers >= 1
+        # watts conserved: what rack 0 gained, rack 1 + pool lost
+        assert math.fsum(fac.caps()) <= 400.0 + 1e-9
+        assert fac.caps()[0] > cap0
+        assert fac.caps()[1] < cap1
+
+    def test_escalation_disabled_stays_local(self):
+        fac = self._fac(escalation=False)
+        cap0 = fac.caps()[0]
+        got = fac.escalate(0, cap0 + 50.0, start=0.0)
+        assert got <= cap0 + 1e-9
+        assert fac.stats.escalations == 0
+        assert fac.caps()[0] == cap0
+
+    def test_local_coverage_never_escalates(self):
+        fac = self._fac()
+        got = fac.escalate(0, 30.0, start=0.0)   # well inside rack 0's cap
+        assert got >= 30.0 - 1e-9
+        assert fac.stats.escalations == 0
+
+    def test_potential_includes_sibling_spare(self):
+        fac = self._fac()
+        local_only = self._fac(escalation=False)
+        assert fac.potential_w(0) > local_only.potential_w(0)
+
+
+# ---------------------------------------------------------------------- #
+#  Single-rack identity (invariant 2): all six policies
+# ---------------------------------------------------------------------- #
+class TestSingleRackIdentity:
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_bit_identical_to_bare_coordinator(self, policy, testbed,
+                                               fitted, app_feats):
+        jobs = list(multi_rack_workload(APPS, testbed, n_devices=3,
+                                        n_jobs=30, seed=5))
+        kw = dict(predictor=fitted, app_features=app_feats, n_devices=3)
+        for grant in GRANT_POLICIES:
+            fed = FacilityCoordinator(430.0, [3], grant_policy=grant)
+            bare = PowerCapCoordinator(430.0, grant_policy=grant)
+            r1 = run_schedule(jobs, policy, Testbed(seed=1000),
+                              power_coordinator=fed, **kw)
+            r2 = run_schedule(jobs, policy, Testbed(seed=1000),
+                              power_coordinator=bare, **kw)
+            assert len(r1.records) == len(r2.records)
+            for a, b in zip(r1.records, r2.records):
+                # rack provenance is the *only* allowed difference
+                assert a == b, (policy, grant, a, b)
+                assert (a.start, a.end, a.energy_j, a.power_grant_w) == \
+                    (b.start, b.end, b.energy_j, b.power_grant_w)
+                assert a.rack == 0 and b.rack is None
+            assert r1.migrations == 0
+
+
+# ---------------------------------------------------------------------- #
+#  Facility cap safety fuzz (invariant 1)
+# ---------------------------------------------------------------------- #
+class TestFacilityCapSafety:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        sizes=st.lists(st.integers(1, 3), min_size=1, max_size=3),
+        cap_frac=st.floats(0.45, 0.9),
+        grant_idx=st.integers(0, len(GRANT_POLICIES) - 1),
+        share_idx=st.integers(0, len(FACILITY_SHARE_POLICIES) - 1),
+        seed=st.integers(0, 10),
+    )
+    def test_granted_ledger_peak_under_cap(self, sizes, cap_frac,
+                                           grant_idx, share_idx, seed):
+        f = _fixture()
+        testbed, fitted, app_feats = (f["testbed"], f["predictor"],
+                                      f["features"])
+        n_dev = sum(sizes)
+        jobs = list(multi_rack_workload(APPS, testbed, n_devices=n_dev,
+                                        n_jobs=24, seed=seed))
+        r0 = run_schedule(jobs, "min-energy", Testbed(seed=1000),
+                          predictor=fitted, app_features=app_feats,
+                          n_devices=n_dev)
+        idle_w = testbed.idle_power()
+        led0 = PowerTelemetry.from_result(r0, idle_powers=idle_w,
+                                          n_devices=n_dev)
+        idle = idle_w * n_dev
+        cap = idle + cap_frac * max(led0.peak_w - idle, 1.0)
+        fac = FacilityCoordinator(
+            cap, sizes, grant_policy=GRANT_POLICIES[grant_idx],
+            share_policy=FACILITY_SHARE_POLICIES[share_idx])
+        r = run_schedule(jobs, "min-energy", Testbed(seed=1000),
+                         predictor=fitted, app_features=app_feats,
+                         n_devices=n_dev, power_coordinator=fac)
+        for view in ("granted", "measured"):
+            led = PowerTelemetry.from_result(
+                r, idle_powers=idle_w, n_devices=n_dev, view=view)
+            assert led.peak_w <= cap * (1 + 1e-9) + 1e-6, \
+                (sizes, cap_frac, view)
+        # per-rack caps never sum above the facility cap at the end
+        assert math.fsum(fac.caps()) <= cap * (1 + 1e-9) + 1e-6
+        # no device ran two jobs at once, and racks partition devices
+        by_dev: dict[int, list] = {}
+        for rec in r.records:
+            assert fac.rack_of(rec.device) == rec.rack
+            by_dev.setdefault(rec.device, []).append((rec.start, rec.end))
+        for spans in by_dev.values():
+            spans.sort()
+            for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+                assert s2 >= e1 - 1e-9
+
+
+# ---------------------------------------------------------------------- #
+#  Straggler mechanics: boost ladder, quarantine, migration billing
+# ---------------------------------------------------------------------- #
+class TestFederatedPreemptionUnit:
+    def _mgr(self, sizes=(2, 2), **kw):
+        kw.setdefault("dvfs", V5E_DVFS)
+        return FederatedPreemptionManager(sizes, **kw)
+
+    def test_slowdown_injection(self):
+        mgr = self._mgr(device_slowdown={1: 2.5})
+        assert mgr.slowdown_of(1) == 2.5
+        assert mgr.slowdown_of(0) == 1.0
+
+    def test_mitigate_clock_identity_when_healthy(self):
+        mgr = self._mgr()
+        clk = V5E_DVFS.default_clock
+        # unflagged device: the SAME object comes back (engine keys its
+        # recompute on identity)
+        assert mgr.mitigate_clock(0, clk, None) is clk
+
+    def test_mitigate_clock_climbs_ladder(self):
+        mgr = self._mgr()
+        # flag device 1 via observations
+        for _ in range(12):
+            mgr.note_step(1, observed_s=3.0, predicted_s=1.0)
+            mgr.note_step(0, observed_s=1.0, predicted_s=1.0)
+        assert 1 in mgr.monitor.flagged
+        clk = ClockPair(min(V5E_DVFS.core_scales), 1.0)
+        seen = [clk.s_core]
+        for _ in range(len(V5E_DVFS.core_scales) + 2):
+            nxt = mgr.mitigate_clock(1, clk, None)
+            if nxt.s_core == seen[-1]:
+                break
+            seen.append(nxt.s_core)
+        # strictly climbing, reaches the top rung, then pins there
+        assert seen == sorted(set(seen))
+        assert mgr.monitor.boosts[1].s_core == max(V5E_DVFS.core_scales)
+        assert mgr.monitor.should_evict(1)
+
+    def test_foreign_ladder_never_boosted(self):
+        mgr = self._mgr()
+        for _ in range(12):
+            mgr.note_step(1, observed_s=3.0, predicted_s=1.0)
+        clk = ClockPair(min(V5E_DVFS.core_scales), 1.0)
+        import dataclasses as dc
+        foreign = dc.replace(V5E_DVFS,
+                             core_scales=(0.5, 1.0))
+        assert mgr.mitigate_clock(1, clk, foreign) is clk
+
+    def test_retire_quarantines_but_never_strands(self):
+        mgr = self._mgr(sizes=(1, 1))
+        assert mgr.retire("rescue-migration", 0) is True
+        assert mgr.quarantined == frozenset({0})
+        # last in-service device must stay
+        assert mgr.retire("rescue-migration", 1) is False
+        assert mgr.quarantined == frozenset({0})
+        # non-migration reasons never retire
+        assert mgr.retire("cap-rescue", 1) is False
+
+    def test_reset_clears_quarantine_and_monitor(self):
+        mgr = self._mgr(sizes=(1, 1))
+        mgr.retire("rescue-migration", 0)
+        for _ in range(12):
+            mgr.note_step(1, observed_s=3.0, predicted_s=1.0)
+        mgr.reset()
+        assert mgr.quarantined == frozenset()
+        assert mgr.monitor.flagged == []
+        assert mgr.fed.observations == 0
+
+    def test_migration_cost_same_rack_free(self):
+        mgr = self._mgr(sizes=(2, 2))
+        job = object.__new__(type("J", (), {}))  # placeholder identity
+        mgr._prev_dev[id(job)] = 0
+        assert mgr.migration_cost(job, 1) == (0.0, 0.0, None)
+
+    def test_migration_cost_cross_rack_billed(self):
+        mgr = self._mgr(sizes=(2, 2))
+
+        class _App:
+            hbm_bytes = 4e9
+
+        class _Job:
+            app = _App()
+
+        job = _Job()
+        mgr._prev_dev[id(job)] = 0
+        secs, joules, src = mgr.migration_cost(job, 2)
+        exp_s, exp_j = mgr.cost_model.cost(4e9)
+        assert (secs, joules, src) == (pytest.approx(exp_s),
+                                       pytest.approx(exp_j), 0)
+        assert mgr.fed.migration_s == pytest.approx(exp_s)
+        assert mgr.fed.migration_j == pytest.approx(exp_j)
+
+    def test_unknown_provenance_is_free(self):
+        mgr = self._mgr(sizes=(2, 2))
+        class _Job:
+            pass
+        assert mgr.migration_cost(_Job(), 2) == (0.0, 0.0, None)

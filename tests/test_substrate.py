@@ -226,6 +226,35 @@ class TestFaultTolerance:
         assert mon.should_evict(3)
         assert not mon.should_evict(0)
 
+    def test_recovered_straggler_resets_ladder(self):
+        # a boosted replica that drops back under threshold must not be
+        # evictable on its stale max-clock boost — recovery clears it
+        mon = StragglerMonitor(n_replicas=4, dvfs=V5E_DVFS, threshold=1.4)
+        slow = np.full(4, 1.0)
+        slow[2] = 3.0
+        for _ in range(10):
+            mon.observe(slow.copy())
+        assert 2 in mon.flagged
+        mon.boosts[2] = ClockPair(max(V5E_DVFS.core_scales), 1.0)
+        assert mon.should_evict(2)
+        for _ in range(30):  # replica 2 recovers to fleet speed
+            flagged = mon.observe(np.full(4, 1.0))
+        assert 2 not in flagged
+        assert 2 not in mon.boosts  # ladder reset on recovery
+        assert not mon.should_evict(2)
+        # a later relapse starts the ladder from scratch
+        for _ in range(10):
+            mon.observe(slow.copy())
+        assert 2 in mon.flagged
+        assert not mon.should_evict(2)
+
+    def test_package_level_exports(self):
+        import repro.dist as dist
+        for name in ("StragglerMonitor", "FailureInjector",
+                     "TrainingRunner", "RunnerConfig", "SimulatedFailure"):
+            assert getattr(dist, name) is not None
+            assert name in dist.__all__
+
     def test_no_false_positives_on_uniform_fleet(self):
         mon = StragglerMonitor(n_replicas=16, dvfs=V5E_DVFS)
         rng = np.random.default_rng(0)
