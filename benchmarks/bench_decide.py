@@ -27,7 +27,12 @@ bit-identity oracle. This bench measures exactly that trade on 100k-job /
   hierarchy (PR 9): demand-weighted cap rebalancing and hierarchical
   grant escalation happen *around* dispatch (advance/commit), so the
   federated coordinator must preserve the scalar/batched identity
-  contract and stay on the vectorized fast path.
+  contract and stay on the vectorized fast path;
+* ``models``        — classless pool on a stream mixing the paper suite
+  with the repo's own model-derived apps (PR 10): per-(config, phase)
+  apps registered through the profiling path must resolve through the
+  same batched ladder prefetch and scalar-identity contract as the
+  hand-written paper apps.
 
 Every scenario runs the *same* job stream twice — ``batch_decide=False``
 (scalar oracle) then ``batch_decide=True`` — asserts the two record
@@ -67,8 +72,8 @@ from repro.core import (ColdStartSynthesizer, FacilityCoordinator,
                         PredictionService, PowerCapCoordinator, RiskAware,
                         V5E_CLASS, V5E_DVFS, V5LITE_CLASS, V5P_CLASS,
                         heterogeneous_workload, make_device_pool,
-                        multi_tenant_workload, run_schedule,
-                        stream_workload)
+                        model_app_suite, multi_tenant_workload,
+                        register_model_apps, run_schedule, stream_workload)
 from repro.core.features import clock_features
 from repro.core.prediction_service import (DEFAULT_KERNEL_MIN_ROWS,
                                            kernel_min_rows_default)
@@ -207,6 +212,23 @@ def run_scenarios(f, n_jobs: int) -> dict:
     cold = list(stream_workload(list(apps) + novel, tb, n_jobs=n_jobs,
                                 seed=1, n_devices=N_DEVICES))
     out["coldstart"] = _scenario(f, svc_c, "coldstart", cold, None, None)
+
+    # model-derived stream: the repo's own (config, phase) apps (PR 10)
+    # ride the same dispatch fast path as the paper suite — features
+    # registered through the profiling path, ladders pre-warmed like the
+    # profiled corpus (own service copy so the shared fixture dict stays
+    # untouched)
+    svc_m = PredictionService(V5E_DVFS, predictor=f["predictor"],
+                              app_features=dict(f["features"]),
+                              testbed=f["testbed"])
+    suite = list(model_app_suite())
+    register_model_apps(svc_m, tb)
+    _warm_tables(svc_m, f, None)
+    for app in suite:
+        svc_m.table(app.name, None)
+    mod = list(stream_workload(list(apps) + suite, tb, n_jobs=n_jobs,
+                               seed=1, n_devices=N_DEVICES))
+    out["models"] = _scenario(f, svc_m, "models", mod, None, None)
 
     svc_h = _service(f)
     _warm_tables(svc_h, f, pool)

@@ -4,13 +4,14 @@ performance is characterized structurally in EXPERIMENTS.md §Roofline), plus
 the GBDT scheduler-hot-loop comparison vs the numpy ensemble walk."""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv
+from benchmarks.common import csv, write_bench_json
 
 
 def _time(fn, *args, n=5):
@@ -78,4 +79,12 @@ def main() -> dict:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the timing payload as JSON (same uniform "
+                         "shape the benchmark runner emits)")
+    args = ap.parse_args()
+    out = main()
+    if args.json:
+        p = write_bench_json("kernels", out, path=args.json)
+        print(f"# wrote {p}")

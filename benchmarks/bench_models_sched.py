@@ -1,0 +1,346 @@
+"""Model-derived workload benchmark: the repo's own models as apps
+(docs/architecture.md#model-derived-workloads).
+
+Scenario: :func:`~repro.core.model_apps.model_app_suite` turns every
+registered model config into per-phase apps (``<arch>:prefill``,
+``<arch>:decode``, ``<arch>:train_step``) whose counters come from the
+``roofline/analysis.py`` analytic terms; :func:`register_model_apps`
+profiles them through the same path as the paper suite. A diurnal serving
+mix plus a background training stream is scheduled on a heterogeneous
+(v5p/v5e/v5lite) pool under a binding power cap. Claims printed:
+
+* **headline** — min-energy beats max-clock on total energy at no more
+  deadline misses on the capped heterogeneous mix (the paper's central
+  trade, re-established on the repo's own workloads);
+* **cold start** — with one architecture's derived apps' feature vectors
+  withheld, synthesized + online-corrected recovers >= 50% of the
+  frozen -> fully-profiled-oracle regret (the ISSUE acceptance bar);
+* **identity** — a paper-suite-only stream is bit-identical for all six
+  policies whether or not the derived suite is registered (invariant #12:
+  registration is observationally inert).
+
+``--smoke`` runs a reduced copy (small GBDT, short streams) as a fast CI
+gate; the full run uses the shared fixtures and longer streams.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import csv, fixtures, write_bench_json
+from repro.core import (ColdStartSynthesizer, EnergyTimePredictor,
+                        OnlineAdapter, PowerCapCoordinator, PowerTelemetry,
+                        PredictionService, PredictorConfig, RiskAware,
+                        Testbed, V5E_CLASS, V5E_DVFS, V5LITE_CLASS,
+                        V5P_CLASS, build_dataset, merge_workloads,
+                        model_app_suite, profile_features,
+                        register_model_apps, run_schedule, serving_workload,
+                        stream_workload, training_workload)
+from repro.core.gbdt import GBDTParams
+from repro.core.policies import POLICY_NAMES
+
+#: Acceptance bar from ISSUE.md: corrected must close at least this
+#: fraction of the frozen-synthesized -> profiled-oracle regret gap.
+RECOVERY_BAR = 0.50
+
+#: Heterogeneous pool for the headline mix: one fast, two default, one
+#: slow device — placement and per-class ladders both matter.
+POOL = (V5P_CLASS, V5E_CLASS, V5E_CLASS, V5LITE_CLASS)
+
+#: Binding cap: idle + this fraction of the uncapped max-clock peak
+#: headroom (the differential harness's construction).
+CAP_FRAC = 0.7
+
+#: Architecture whose derived apps are withheld in the cold-start run:
+#: the MoE giant — its spike latent (expert-routing load imbalance) is
+#: exactly what the synthesizer's analytic prior cannot see.
+COLD_ARCH = "kimi_k2_1t_a32b"
+
+#: Workload seeds aggregated by the cold-start experiment. A single
+#: 240-job stream's miss count is queue-noise-dominated (the synthesized
+#: ladder's ~10% time underestimate moves only a handful of deadlines);
+#: summing misses across independent streams exposes the systematic
+#: frozen -> oracle gap the recovery bar is measured against.
+COLD_SEEDS_SMOKE = (11, 13, 17)
+COLD_SEEDS_FULL = (11, 13, 17, 19, 23)
+
+
+def _small_config() -> PredictorConfig:
+    return PredictorConfig(
+        gbdt=GBDTParams(iterations=80, depth=3, learning_rate=0.15,
+                        l2_leaf_reg=5.0),
+        gbdt_time=GBDTParams(iterations=80, depth=3, learning_rate=0.15,
+                             l2_leaf_reg=3.0))
+
+
+def _smoke_fixtures() -> dict:
+    """Small self-contained stand-in for benchmarks.common.fixtures()."""
+    from repro.configs.paper_suite import PAPER_APPS
+    tb = Testbed(seed=0)
+    apps = list(PAPER_APPS)[:8]
+    X, yp, yt, _ = build_dataset(apps, tb, seed=0)
+    rng = np.random.default_rng(7)
+    return {
+        "testbed": tb,
+        "apps": apps,
+        "features": {a.name: profile_features(a, tb, rng=rng) for a in apps},
+        "predictor": EnergyTimePredictor(_small_config()).fit(X, yp, yt),
+        "config": _small_config(),
+    }
+
+
+def _features_all(f) -> dict:
+    """Paper features + the derived suite, profiled through the same path."""
+    feats = dict(f["features"])
+    feats.update(register_model_apps(None, f["testbed"]))
+    return feats
+
+
+def _mix_jobs(f, n_serve: int, n_train: int, seed: int = 0) -> list:
+    suite = model_app_suite()
+    pool = list(POOL)
+    return merge_workloads(
+        serving_workload(suite, f["testbed"], n_jobs=n_serve, seed=seed,
+                         n_devices=len(pool), pool=pool, overload=1.3),
+        training_workload(suite, f["testbed"], n_jobs=n_train, seed=seed + 1,
+                          n_devices=len(pool), pool=pool))
+
+
+def _run_mix(f, jobs, policy, features, coordinator=None):
+    return run_schedule(jobs, policy, Testbed(seed=100),
+                        predictor=f["predictor"], app_features=features,
+                        n_devices=len(POOL), device_classes=list(POOL),
+                        power_coordinator=coordinator)
+
+
+def _binding_cap(f, jobs, features) -> float:
+    """Idle + CAP_FRAC of the uncapped max-clock peak headroom."""
+    r0 = _run_mix(f, jobs, "mc", features)
+    led = PowerTelemetry.from_result(r0, pool=list(POOL))
+    idle = sum(c.idle_power() for c in POOL)
+    return idle + CAP_FRAC * max(led.peak_w - idle, 1.0)
+
+
+def mix_headline(f, n_serve: int, n_train: int) -> dict:
+    """The headline experiment: min-energy vs max-clock on the derived
+    serving + training mix over the capped heterogeneous pool."""
+    features = _features_all(f)
+    jobs = _mix_jobs(f, n_serve, n_train)
+    cap_w = _binding_cap(f, jobs, features)
+
+    t0 = time.time()
+    results = {}
+    for pol in ("mc", "min-energy"):
+        coord = PowerCapCoordinator(cap_w, grant_policy="slack-weighted",
+                                    guard=0.15)
+        results[pol] = _run_mix(f, jobs, pol, features, coordinator=coord)
+    wall = time.time() - t0
+
+    r_mc, r_me = results["mc"], results["min-energy"]
+    saved = 1.0 - r_me.total_energy / max(r_mc.total_energy, 1e-9)
+    names = [rec.name for rec in r_me.records]
+    n_decode = sum(1 for n in names if n.endswith(":decode"))
+    n_train_rec = sum(1 for n in names if n.endswith(":train_step"))
+    archs = {n.split(":")[0] for n in names if ":" in n}
+
+    csv("models_mix", wall,
+        f"jobs={len(jobs)} cap={cap_w:.0f}W "
+        f"mc:E={r_mc.total_energy:.0f}J,miss={r_mc.misses} "
+        f"min-energy:E={r_me.total_energy:.0f}J,miss={r_me.misses} "
+        f"saved={100 * saved:.1f}% decode={n_decode} train={n_train_rec} "
+        f"archs={len(archs)}")
+
+    ok_energy = r_me.total_energy <= r_mc.total_energy
+    ok_miss = r_me.misses <= r_mc.misses
+    ok_mix = n_decode >= 1 and n_train_rec >= 1 and len(archs) >= 2
+    print(f"# claim[models energy]: min-energy spends "
+          f"{r_me.total_energy:.0f}J vs max-clock "
+          f"{r_mc.total_energy:.0f}J ({100 * saved:.1f}% saved) on the "
+          f"capped heterogeneous mix ({'OK' if ok_energy else 'FAIL'})")
+    print(f"# claim[models deadlines]: min-energy misses {r_me.misses} <= "
+          f"max-clock {r_mc.misses} of {len(jobs)} jobs "
+          f"({'OK' if ok_miss else 'FAIL'})")
+    print(f"# claim[models mix]: {n_decode} decode + {n_train_rec} "
+          f"train-step dispatches across {len(archs)} architectures "
+          f"({'OK' if ok_mix else 'FAIL'})")
+    assert ok_energy, "min-energy spent more than max-clock on the mix"
+    assert ok_miss, "min-energy missed more deadlines than max-clock"
+    assert ok_mix, "the mix never exercised decode+train across >=2 archs"
+    return {
+        "jobs": len(jobs), "cap_w": float(cap_w),
+        "mc": {"energy": r_mc.total_energy, "misses": r_mc.misses},
+        "min_energy": {"energy": r_me.total_energy, "misses": r_me.misses},
+        "saved_frac": float(saved),
+        "decode_records": n_decode, "train_records": n_train_rec,
+        "archs": sorted(archs),
+    }
+
+
+def cold_model_regret(seeds, n_jobs: int, n_devices: int = 2) -> dict:
+    """Cold-start on a *derived* app: the MoE giant's feature vectors are
+    withheld; frozen-synthesized vs synthesized+corrected vs a true
+    oracle (predictor retrained on the withheld apps' measurement rows),
+    exactly paired per stream, misses summed across ``seeds``.
+
+    Self-contained fixtures: the experiment pins its own small GBDT for
+    both the base predictor and the oracle retrain — regret is only
+    well-defined when the oracle is actually better than the analytic
+    synthesizer, and the paper-size GBDT retrained on this small mixed
+    corpus is not (it extrapolates worse than the roofline prior on the
+    trillion-parameter decode apps)."""
+    f = _smoke_fixtures()
+    tb = f["testbed"]
+    feats_all = _features_all(f)
+    withheld = {n for n in feats_all if n.startswith(f"{COLD_ARCH}:")}
+    assert withheld, f"no derived apps for {COLD_ARCH!r}"
+    feats_cold = {n: v for n, v in feats_all.items() if n not in withheld}
+    suite = {a.name: a for a in model_app_suite()}
+    apps = list(f["apps"])[:5] + [suite[n] for n in sorted(withheld)]
+    Xa, ypa, yta, _ = build_dataset(apps, tb, seed=0,
+                                    app_features=feats_all)
+    pred_all = EnergyTimePredictor(f["config"]).fit(Xa, ypa, yta)
+
+    def svc(predictor, features):
+        return PredictionService(V5E_DVFS, predictor=predictor,
+                                 app_features=dict(features), testbed=tb)
+
+    t0 = time.time()
+    miss = {"frozen": 0, "corrected": 0, "oracle": 0}
+    energy = {"frozen": 0.0, "corrected": 0.0, "oracle": 0.0}
+    n_cold_jobs = 0
+    dispatched: set = set()
+    synth_frozen = None
+    for seed in seeds:
+        jobs = list(stream_workload(apps, tb, n_jobs=n_jobs, seed=seed,
+                                    n_devices=n_devices, utilization=0.65))
+        n_cold_jobs += sum(1 for j in jobs if j.app.name in withheld)
+
+        synth_frozen = ColdStartSynthesizer()
+        r = run_schedule(jobs, RiskAware(V5E_DVFS, margin=0.05),
+                         Testbed(seed=100),
+                         service=svc(f["predictor"], feats_cold),
+                         n_devices=n_devices, coldstart=synth_frozen)
+        miss["frozen"] += r.misses
+        energy["frozen"] += r.total_energy
+        dispatched |= {rec.name for rec in r.records
+                       if rec.name in withheld}
+
+        service = svc(f["predictor"], feats_cold)
+        adapter = OnlineAdapter(service, risk_scale=1.0, max_margin=0.2)
+        r = run_schedule(jobs,
+                         RiskAware(V5E_DVFS, margin=0.05,
+                                   margin_fn=adapter.margin),
+                         Testbed(seed=100), service=service,
+                         n_devices=n_devices,
+                         coldstart=ColdStartSynthesizer(),
+                         feedback=adapter)
+        miss["corrected"] += r.misses
+        energy["corrected"] += r.total_energy
+
+        r = run_schedule(jobs, RiskAware(V5E_DVFS, margin=0.05),
+                         Testbed(seed=100),
+                         service=svc(pred_all, feats_all),
+                         n_devices=n_devices)
+        miss["oracle"] += r.misses
+        energy["oracle"] += r.total_energy
+    wall = time.time() - t0
+
+    total = n_jobs * len(seeds)
+    gap = miss["frozen"] - miss["oracle"]
+    recovered = (miss["frozen"] - miss["corrected"]) / max(gap, 1)
+    csv("models_coldstart", wall,
+        f"jobs={total}({n_cold_jobs} cold) streams={len(seeds)} "
+        f"withheld={len(withheld)} "
+        f"miss frozen/corrected/oracle="
+        f"{miss['frozen']}/{miss['corrected']}/{miss['oracle']} "
+        f"rec={100 * recovered:.0f}%")
+
+    ok_vac = (synth_frozen.stats.registered == len(withheld)
+              and synth_frozen.stats.synthesized_tables > 0
+              and dispatched == withheld and n_cold_jobs >= 1)
+    ok_gap = gap > 0
+    ok_rec = recovered >= RECOVERY_BAR
+    ok_no_worse = miss["corrected"] <= miss["frozen"]
+    print(f"# claim[models cold start]: corrected recovers "
+          f"{100 * recovered:.0f}% of the frozen->oracle miss regret on "
+          f"the withheld {COLD_ARCH!r} apps "
+          f"({miss['frozen']}->{miss['corrected']} vs oracle "
+          f"{miss['oracle']} over {len(seeds)} streams), bar "
+          f"{100 * RECOVERY_BAR:.0f}% ({'OK' if ok_rec else 'FAIL'})")
+    print(f"# claim[models cold deadlines]: corrected misses "
+          f"{miss['corrected']} <= frozen {miss['frozen']} "
+          f"({'OK' if ok_no_worse else 'FAIL'})")
+    print(f"# claim[models cold coverage]: {len(withheld)} withheld apps "
+          f"registered, {len(dispatched)} dispatched from synthesized "
+          f"tables, {n_cold_jobs} cold jobs across streams "
+          f"({'OK' if ok_vac else 'FAIL'})")
+    assert ok_vac, "withheld model apps never reached a synthesized table"
+    assert ok_gap, "withholding features produced no regret to recover"
+    assert ok_rec, "corrected failed the >=50% regret recovery bar"
+    assert ok_no_worse, "online correction made cold-start misses worse"
+    return {
+        "jobs": total, "cold_jobs": n_cold_jobs, "streams": len(seeds),
+        "withheld": sorted(withheld),
+        "misses": dict(miss), "energy": dict(energy),
+        "recovered_frac": float(recovered),
+    }
+
+
+def registration_identity(f, n_jobs: int = 60) -> dict:
+    """Invariant #12 / acceptance criterion: a paper-suite-only stream is
+    bit-identical for all six policies whether or not the derived suite's
+    feature vectors are registered."""
+    tb = f["testbed"]
+    feats_all = _features_all(f)
+    jobs = list(stream_workload(f["apps"], tb, n_jobs=n_jobs, seed=3,
+                                n_devices=2, utilization=0.65))
+    t0 = time.time()
+    checked = []
+    for pol in POLICY_NAMES:
+        r_plain = run_schedule(jobs, pol, Testbed(seed=200),
+                               predictor=f["predictor"],
+                               app_features=f["features"], n_devices=2)
+        r_reg = run_schedule(jobs, pol, Testbed(seed=200),
+                             predictor=f["predictor"],
+                             app_features=feats_all, n_devices=2)
+        assert r_reg.records == r_plain.records, \
+            f"registering model apps changed paper-app decisions " \
+            f"under {pol!r}"
+        checked.append(pol)
+    csv("models_identity", time.time() - t0,
+        f"jobs={n_jobs} policies={len(checked)} bit-identical")
+    print(f"# claim[models identity]: paper-suite-only run bit-identical "
+          f"with {len(feats_all) - len(f['features'])} derived apps "
+          f"registered for all {len(checked)} policies (OK)")
+    return {"policies": checked, "jobs": n_jobs,
+            "registered": len(feats_all) - len(f["features"])}
+
+
+def main(smoke: bool = False) -> dict:
+    if smoke:
+        f = _smoke_fixtures()
+        n_serve, n_train = 60, 16
+        cold_seeds, cold_jobs = COLD_SEEDS_SMOKE, 240
+    else:
+        f = fixtures()
+        n_serve, n_train = 120, 30
+        cold_seeds, cold_jobs = COLD_SEEDS_FULL, 400
+    return {
+        "headline": mix_headline(f, n_serve, n_train),
+        "cold_start": cold_model_regret(cold_seeds, cold_jobs),
+        "identity": registration_identity(f),
+    }
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced fast-gate configuration (CI)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the result payload as JSON")
+    args = ap.parse_args()
+    out = main(smoke=args.smoke)
+    if args.json:
+        write_bench_json("models_sched", out, path=args.json)

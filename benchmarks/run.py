@@ -54,6 +54,10 @@ BENCHES = [
     ("federation", "benchmarks.bench_federation",
      "Beyond paper: hierarchical multi-rack federation — facility cap "
      "splits, grant escalation, straggler-driven cross-rack rescue"),
+    ("models_sched", "benchmarks.bench_models_sched",
+     "Beyond paper: model-derived workloads — the repo's own configs as "
+     "apps, serving/training mix on a capped heterogeneous pool, "
+     "withheld-app cold start"),
     ("kernels", "benchmarks.bench_kernels",
      "Kernel micro-benchmarks"),
     ("roofline", "benchmarks.bench_roofline",

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.base import reduce_for_smoke
+from repro.core.model_apps import derive_app
 from repro.models import model
 from repro.train.serve import greedy_generate
 
@@ -26,6 +27,11 @@ def main():
     cfg = reduce_for_smoke(get_config(args.arch))
     print(f"arch={cfg.name} family={cfg.family} "
           f"(reduced config for CPU serving demo)")
+    for phase in ("prefill", "decode"):
+        app = derive_app(args.arch, phase)
+        print(f"scheduler app: {app.name} (flops={app.flops:.3g} "
+              f"hbm={app.hbm_bytes:.3g}B n_chips={app.n_chips}, "
+              f"full-size counters the DVFS scheduler dispatches on)")
     params = model.init(cfg, jax.random.PRNGKey(0))
 
     prompt = jax.random.randint(

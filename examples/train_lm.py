@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.model_apps import derive_app
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.dist.fault_tolerance import (FailureInjector, RunnerConfig,
                                         TrainingRunner)
@@ -42,6 +43,11 @@ def main():
     n_params = cfg.param_count()
     print(f"model: {args.layers}L d={args.dim} vocab={args.vocab} "
           f"→ {n_params/1e6:.1f}M params")
+    app = derive_app("smollm-360m", "train_step")
+    print(f"scheduler app: {app.name} (flops={app.flops:.3g} "
+          f"hbm={app.hbm_bytes:.3g}B coll={app.coll_bytes:.3g}B "
+          f"n_chips={app.n_chips}, full-size counters the DVFS "
+          f"scheduler dispatches on)")
 
     params = model.init(cfg, jax.random.PRNGKey(0))
     ocfg = adamw.AdamWConfig(lr=5e-3, warmup_steps=20,
@@ -54,24 +60,34 @@ def main():
                                   global_batch=args.batch, seed=0,
                                   order=1))
 
+    # keyed by step so checkpoint-restart replays overwrite, not duplicate
+    history = {}
+    cur_step = {"s": 0}
+
     def data_fn(s):
+        cur_step["s"] = s
         return {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+
+    def step_fn(p, o, batch):
+        p, o, m = step(p, o, batch)
+        history[cur_step["s"]] = float(m["loss"])
+        return p, o, m
 
     ckpt_dir = tempfile.mkdtemp(prefix="repro_train_lm_")
     injector = FailureInjector(fail_at=(args.steps // 2,)) \
         if args.inject_failure else None
     runner = TrainingRunner(
         RunnerConfig(ckpt_dir=ckpt_dir, ckpt_interval=50),
-        step, data_fn, injector=injector)
+        step_fn, data_fn, injector=injector)
 
     t0 = time.time()
-    params, opt, final = runner.run(params, opt, 0, args.steps)
+    params, opt, _ = runner.run(params, opt, 0, args.steps)
     dt = time.time() - t0
-    losses = [h["loss"] for h in runner.history]
+    losses = [history[s] for s in sorted(history)]
     first = np.mean(losses[:10])
     last = np.mean(losses[-10:])
-    tok_s = args.batch * args.seq * len(runner.history) / dt
-    print(f"steps={final} restarts={runner.restarts} wall={dt:.0f}s "
+    tok_s = args.batch * args.seq * len(losses) / dt
+    print(f"steps={len(losses)} restarts={runner.restarts} wall={dt:.0f}s "
           f"({tok_s:.0f} tok/s)")
     print(f"loss: {first:.3f} → {last:.3f} "
           f"(uniform = {np.log(args.vocab):.3f})")

@@ -37,7 +37,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 FULL_UNIFORM_FLOOR = 3.0
 # every smoke section — baseline and current — must cover these streams
 REQUIRED_SMOKE = ("uniform", "uniform_cap", "hetero", "hetero_cap",
-                  "tenant", "coldstart", "federation")
+                  "tenant", "coldstart", "federation", "models")
 
 
 def load(path: pathlib.Path) -> dict:

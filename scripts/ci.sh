@@ -35,6 +35,9 @@ python -m benchmarks.bench_coldstart --smoke
 echo "=== smoke: multi-rack federation gate ==="
 python -m benchmarks.bench_federation --smoke
 
+echo "=== smoke: model-derived workload gate ==="
+python -m benchmarks.bench_models_sched --smoke
+
 echo "=== smoke: vectorized decision core + perf regression gate ==="
 DECIDE_JSON="$(mktemp /tmp/bench_decide_smoke.XXXXXX.json)"
 python -m benchmarks.bench_decide --smoke --json "$DECIDE_JSON"

@@ -70,7 +70,15 @@ def main() -> None:
                         "FederatedPreemptionManager with device "
                         f"slowdown {test_golden.FED_SLOWDOWN} on the "
                         "testbed ladder (escalations + a cross-rack "
-                        "migration fire)",
+                        "migration fire); plus "
+                        f"{test_golden.MODELS_KEY!r}: "
+                        f"{test_golden.MODELS_SERVE_JOBS}-job "
+                        "serving_workload(model_app_suite(), seed=0) + "
+                        f"{test_golden.MODELS_TRAIN_JOBS}-job "
+                        "training_workload(seed=1) merged, min-energy, "
+                        "2-class pool [v5p, v5e], derived apps registered "
+                        "via register_model_apps (decode + train steps "
+                        "from >=2 architectures dispatch)",
             "regen": "PYTHONPATH=src python scripts/regen_golden.py",
             "columns": list(test_golden._COLUMNS),
         },

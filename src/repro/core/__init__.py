@@ -16,9 +16,9 @@ from .workload import (BATCH_TIER, BEST_EFFORT_TIER, DEFAULT_TIER, Job,
                        SLO_TIER, TIERS, TierSpec, cap_stress_workload,
                        drift_profile, drifting_workload, edf_key,
                        heterogeneous_workload, make_device_pool,
-                       make_workload, multi_rack_workload,
+                       make_workload, merge_workloads, multi_rack_workload,
                        multi_tenant_workload, rescue_stress_workload,
-                       stream_workload)
+                       serving_workload, stream_workload, training_workload)
 from .admission import AdmissionController, AdmissionStats
 from .prediction_service import (ClockTable, PredictionService, ServiceStats,
                                  StackedTable, UnknownAppError,
@@ -42,6 +42,8 @@ from .federation import (FACILITY_SHARE_POLICIES, FacilityCoordinator,
                          FacilityStats, FederatedPreemptionManager,
                          FederatedStats, MigrationCostModel,
                          RackCoordinator, RackTopology)
+from .model_apps import (KIND_KNOBS, PHASES, derive_app, derive_counters,
+                         kernel_apps, model_app_suite, register_model_apps)
 
 __all__ = [
     "ClockPair", "DVFSConfig", "V5E_DVFS",
@@ -75,4 +77,7 @@ __all__ = [
     "FACILITY_SHARE_POLICIES", "FacilityCoordinator", "FacilityStats",
     "FederatedPreemptionManager", "FederatedStats", "MigrationCostModel",
     "RackCoordinator", "RackTopology", "multi_rack_workload",
+    "KIND_KNOBS", "PHASES", "derive_app", "derive_counters", "kernel_apps",
+    "model_app_suite", "register_model_apps",
+    "serving_workload", "training_workload", "merge_workloads",
 ]

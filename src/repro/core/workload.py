@@ -29,7 +29,8 @@ __all__ = ["Job", "TierSpec", "SLO_TIER", "BATCH_TIER", "BEST_EFFORT_TIER",
            "stream_workload", "drifting_workload", "drift_profile",
            "make_device_pool", "heterogeneous_workload",
            "cap_stress_workload", "rescue_stress_workload",
-           "multi_tenant_workload", "multi_rack_workload"]
+           "multi_tenant_workload", "multi_rack_workload",
+           "serving_workload", "training_workload", "merge_workloads"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -665,3 +666,165 @@ def drifting_workload(
         if i >= cut and job.name in drifted:
             job = dataclasses.replace(job, app=drifted[job.name])
         yield job
+
+
+def _conservative_t_ref(apps: list[AppProfile], testbed: Testbed,
+                        pool: list[DeviceClass] | None, n_devices: int
+                        ) -> tuple[np.ndarray, float, int]:
+    """Per-app default-clock anchor time on the *slowest* class present
+    (feasible even under a bad placement) plus the pool's aggregate
+    default-clock throughput — the :func:`multi_tenant_workload` anchoring
+    contract, shared by the serving/training generators."""
+    if pool is None:
+        t_ref = np.array([testbed.true_time(a, testbed.dvfs.default_clock)
+                          for a in apps])
+        return t_ref, n_devices / float(t_ref.mean()), n_devices
+    t_cls: dict[str, np.ndarray] = {}
+    for cls in pool:
+        if cls.name not in t_cls:
+            t_cls[cls.name] = np.array([
+                testbed.true_time(a, cls.dvfs.default_clock,
+                                  dvfs=cls.dvfs) for a in apps])
+    t_ref = np.max(np.stack(list(t_cls.values())), axis=0)
+    rate = sum(1.0 / float(t_cls[cls.name].mean()) for cls in pool)
+    return t_ref, rate, len(pool)
+
+
+#: Default serving tier mix: latency-SLO interactive traffic dominates,
+#: with a batch band (bulk scoring) and a best-effort backfill slice.
+SERVING_TIER_MIX: tuple[tuple[TierSpec, float], ...] = (
+    (SLO_TIER, 0.50), (BATCH_TIER, 0.30), (BEST_EFFORT_TIER, 0.20),
+)
+
+
+def serving_workload(
+    apps: list[AppProfile],
+    testbed: Testbed,
+    n_jobs: int = 400,
+    seed: int = 0,
+    n_devices: int = 4,
+    pool: list[DeviceClass] | None = None,
+    overload: float = 1.0,
+    tier_mix: tuple[tuple[TierSpec, float], ...] | None = None,
+    diurnal_amp: float = 0.6,
+    period_s: float | None = None,
+    prefill_frac: float = 0.3,
+    mean_interarrival: float | None = None,
+    quantum_frac: float | None = None,
+):
+    """Diurnal inference traffic over the model-derived suite (PR 10).
+
+    Draws only the ``decode`` apps in ``apps`` (each a generation
+    segment), plus — with probability ``prefill_frac`` — a ``prefill``
+    admission burst, so the stream looks like production serving: mostly
+    decode, punctuated by prompt ingestion. Arrivals are the
+    :func:`multi_tenant_workload` nonhomogeneous Poisson process
+    (``1 + diurnal_amp·sin(2πt/period_s)`` rate modulation at ``overload``
+    × the pool's aggregate default-clock throughput); each request draws
+    an SLA tier from ``tier_mix`` (default :data:`SERVING_TIER_MIX`) and
+    an **arrival-anchored** deadline ``arrival + (1 + U[tier.slack_range])
+    × t_ref`` with ``t_ref`` the app's default-clock time on the slowest
+    class in ``pool`` — the conservative anchor that keeps SLO misses a
+    dispatch-latency signal rather than a backlog artifact. A generator
+    in nondecreasing arrival order, like every stream here.
+    """
+    if not 0.0 <= prefill_frac <= 1.0:
+        raise ValueError("prefill_frac must be in [0, 1]")
+    decode_apps = [a for a in apps if a.kind == "decode"]
+    prefill_apps = [a for a in apps if a.kind == "prefill"]
+    if not decode_apps:
+        raise ValueError("serving_workload needs at least one decode app")
+    if not prefill_apps:
+        prefill_frac = 0.0
+    mix = SERVING_TIER_MIX if tier_mix is None else tuple(tier_mix)
+    total_p = sum(p for _, p in mix)
+    if total_p <= 0:
+        raise ValueError("tier_mix probabilities must sum to > 0")
+    cum, acc = [], 0.0
+    for _, p in mix:
+        acc += p / total_p
+        cum.append(acc)
+    rng = np.random.default_rng(seed)
+    served = decode_apps + prefill_apps
+    t_ref, rate, _ = _conservative_t_ref(served, testbed, pool, n_devices)
+    if mean_interarrival is None:
+        mean_interarrival = 1.0 / (rate * overload)
+    if period_s is None:
+        period_s = max(n_jobs * mean_interarrival / 3.0,
+                       8.0 * mean_interarrival)
+    now = 0.0
+    for jid in range(n_jobs):
+        gap = float(rng.exponential(mean_interarrival))
+        mod = 1.0 + diurnal_amp * np.sin(2.0 * np.pi * now / period_s)
+        now += gap / max(float(mod), 1e-9)
+        u = float(rng.random())
+        tier = mix[-1][0]
+        for (t, _), edge in zip(mix, cum):
+            if u <= edge:
+                tier = t
+                break
+        if prefill_frac and float(rng.random()) < prefill_frac:
+            idx = len(decode_apps) + int(rng.integers(len(prefill_apps)))
+        else:
+            idx = int(rng.integers(len(decode_apps)))
+        t_a = float(t_ref[idx])
+        slack = 1.0 + float(rng.uniform(*tier.slack_range))
+        q = None if quantum_frac is None else quantum_frac * t_a
+        yield Job(app=served[idx], arrival=now, deadline=now + slack * t_a,
+                  job_id=jid, checkpoint_quantum=q, tier=tier)
+
+
+def training_workload(
+    apps: list[AppProfile],
+    testbed: Testbed,
+    n_jobs: int = 120,
+    seed: int = 0,
+    n_devices: int = 4,
+    pool: list[DeviceClass] | None = None,
+    utilization: float = 0.4,
+    slack_range: tuple[float, float] = (2.0, 6.0),
+    tier: TierSpec = BATCH_TIER,
+    mean_interarrival: float | None = None,
+    quantum_frac: float | None = None,
+):
+    """Background training jobs over the model-derived suite (PR 10).
+
+    A steady (non-diurnal) Poisson stream of the ``train`` apps in
+    ``apps`` — optimizer steps with gradient all-reduce traffic — sized to
+    ``utilization`` of the pool's aggregate default-clock throughput and
+    tagged ``tier`` (default :data:`BATCH_TIER`: above best-effort, below
+    the serving SLO tier, never shed). Deadlines are arrival-anchored with
+    generous batch slack (``arrival + (1 + U[slack_range]) × t_ref``, the
+    conservative slowest-class anchor), so train steps yield headroom to
+    interactive traffic without becoming unschedulable. Meant to be merged
+    under a serving stream via :func:`merge_workloads`. A generator in
+    nondecreasing arrival order, like every stream here.
+    """
+    train_apps = [a for a in apps if a.kind == "train"]
+    if not train_apps:
+        raise ValueError("training_workload needs at least one train app")
+    rng = np.random.default_rng(seed)
+    t_ref, rate, _ = _conservative_t_ref(train_apps, testbed, pool,
+                                         n_devices)
+    if mean_interarrival is None:
+        mean_interarrival = 1.0 / (rate * utilization)
+    now = 0.0
+    for jid in range(n_jobs):
+        now += float(rng.exponential(mean_interarrival))
+        idx = int(rng.integers(len(train_apps)))
+        t_a = float(t_ref[idx])
+        slack = 1.0 + float(rng.uniform(*slack_range))
+        q = None if quantum_frac is None else quantum_frac * t_a
+        yield Job(app=train_apps[idx], arrival=now,
+                  deadline=now + slack * t_a, job_id=jid,
+                  checkpoint_quantum=q, tier=tier)
+
+
+def merge_workloads(*streams) -> list[Job]:
+    """Merge job streams into one arrival-ordered list with contiguous
+    re-numbered ``job_id``\\ s (the engine requires unique ids; generators
+    each number from 0). The sort is stable, so ties keep the positional
+    stream order — deterministic for deterministic inputs."""
+    jobs = [j for s in streams for j in s]
+    jobs.sort(key=lambda j: j.arrival)
+    return [dataclasses.replace(j, job_id=i) for i, j in enumerate(jobs)]

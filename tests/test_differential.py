@@ -50,8 +50,10 @@ from repro.core import (
     FacilityCoordinator, FederatedPreemptionManager, Job,
     PowerCapCoordinator, PowerTelemetry, PredictorConfig, PreemptionConfig,
     PreemptionManager, SLO_TIER, Testbed, V5E_CLASS, V5E_DVFS, V5LITE_CLASS,
-    V5P_CLASS, build_dataset, multi_rack_workload, profile_features,
-    rescue_stress_workload, run_schedule, stream_workload,
+    V5P_CLASS, build_dataset, edf_key, merge_workloads, model_app_suite,
+    multi_rack_workload, profile_features, register_model_apps,
+    rescue_stress_workload, run_schedule, serving_workload, stream_workload,
+    training_workload,
 )
 from repro.core.gbdt import GBDTParams
 from repro.core.policies import (MinEnergy, POLICY_NAMES, QueueAwareBudget,
@@ -677,6 +679,183 @@ class TestColdStartMixedFuzz:
         b, _ = _cold_run(jobs, 1, "min-energy", None,
                          PreemptionManager(_OFF))
         _assert_identical(a, b)
+
+
+# ---------------------------------------------------------------------- #
+#  Model-derived apps (PR 10): inert registration + mixed-stream fuzz
+# ---------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=1)
+def _model_fixture():
+    """The PR 10 fixture: the paper fixture plus the model-derived suite's
+    feature vectors (registered through the dedicated-RNG profiling path,
+    so building this perturbs nothing the paper fixture computed)."""
+    f = _fixture()
+    suite = model_app_suite()
+    model_feats = register_model_apps(None, f["testbed"])
+    return {**f, "suite": suite,
+            "features_all": {**f["features"], **model_feats}}
+
+
+@functools.lru_cache(maxsize=16)
+def _mixed_model_jobs(seed: int, pool_idx: int, quantum: float):
+    """Paper stream + diurnal serving mix + background train jobs, merged
+    in arrival order with contiguous ids."""
+    f = _model_fixture()
+    _, pool, n_dev = _POOLS[pool_idx]
+    jobs = merge_workloads(
+        stream_workload(APPS, f["testbed"], n_jobs=12, seed=seed,
+                        n_devices=n_dev),
+        serving_workload(f["suite"], f["testbed"], n_jobs=14, seed=seed + 1,
+                         pool=pool, n_devices=n_dev),
+        training_workload(f["suite"], f["testbed"], n_jobs=6, seed=seed + 2,
+                          pool=pool, n_devices=n_dev))
+    if quantum:
+        jobs = [dataclasses.replace(j, checkpoint_quantum=quantum)
+                for j in jobs]
+    return jobs
+
+
+def _model_run(jobs, pool_idx: int, policy: str, coordinator, preemption):
+    f = _model_fixture()
+    _, pool, n_dev = _POOLS[pool_idx]
+    return run_schedule(
+        jobs, policy, Testbed(seed=1000),
+        predictor=f["predictor"], app_features=f["features_all"],
+        n_devices=n_dev, device_classes=pool,
+        power_coordinator=coordinator, preemption=preemption)
+
+
+class TestModelAppRegistrationInert:
+    """Satellite: registering the derived suite must be observationally
+    inert — a paper-suite-only run is bit-identical whether or not
+    `model_apps` features sit in the service (invariant 12)."""
+
+    def test_paper_only_bit_identical_all_policies(self):
+        """Exhaustive over all six policies on the mixed-class pool:
+        same jobs, same testbed seed, records bit-identical with the
+        model-derived features merely registered."""
+        f = _model_fixture()
+        jobs = _jobs(3, 3, 0.0)
+        for policy in POLICY_NAMES:
+            a = _run(jobs, 3, policy, None, None)
+            b = _model_run(jobs, 3, policy, None, None)
+            _assert_identical(a, b)
+
+    def test_paper_only_identical_capped_and_segmented(self):
+        """The same inertness through the coordinated + segmented paths
+        (binding cap, trigger-disabled manager): grants, deferrals, and
+        boundary visits all line up."""
+        jobs = _jobs(5, 1, 0.3)
+        for cap_kind in ("none", "binding"):
+            coord_a = _coordinator(cap_kind, jobs, 1, "min-energy")
+            coord_b = _coordinator(cap_kind, jobs, 1, "min-energy")
+            a = _run(jobs, 1, "min-energy", coord_a, None)
+            b = _model_run(jobs, 1, "min-energy", coord_b,
+                           PreemptionManager(_OFF))
+            _assert_identical(a, b)
+
+    def test_registration_preserves_rng_and_features(self):
+        """Building the model fixture never mutates the paper fixture's
+        feature dict or the shared testbed RNG state (the engine's
+        determinism backbone)."""
+        f0 = _fixture()
+        state = f0["testbed"]._rng.bit_generator.state
+        fm = _model_fixture()
+        assert f0["testbed"]._rng.bit_generator.state == state
+        assert set(f0["features"]) < set(fm["features_all"])
+        for name in f0["features"]:
+            assert fm["features_all"][name] is f0["features"][name]
+
+
+class TestMixedModelStreamFuzz:
+    """Satellite: paper + serving + training job mixes keep every
+    structural invariant the profiled-only fuzz pins — uncapped, capped,
+    and preemptive — with tier-aware EDF dispatch among admitted jobs."""
+
+    def _check_edf_tiered(self, jobs, r):
+        """EDF-among-admitted, generalized to SLA tiers: if job b started
+        while a higher-urgency job a (by ``edf_key``: tier priority, then
+        deadline) was already pending, the engine would have dispatched a
+        first — so no such pair may exist."""
+        starts = {rec.job_id: rec.start for rec in r.records
+                  if rec.segment == 0}
+        by_id = {j.job_id: j for j in jobs}
+        order = sorted(starts.items(), key=lambda kv: kv[1])
+        for i, (jb, sb) in enumerate(order):
+            for ja, sa in order[i + 1:]:
+                a, b = by_id[ja], by_id[jb]
+                if a.arrival <= sb and sa > sb:
+                    ka, kb = edf_key(a), edf_key(b)
+                    assert (ka[0] > kb[0]
+                            or (ka[0] == kb[0] and ka[1] >= kb[1] - 1e-9)), \
+                        (ja, jb)
+
+    def test_mixed_stream_is_not_vacuous(self):
+        """The merged stream really schedules all three populations: at
+        least one decode segment, one train step, multiple architectures,
+        and at least one paper app are dispatched."""
+        jobs = _mixed_model_jobs(0, 3, 0.0)
+        r = _model_run(jobs, 3, "min-energy", None, None)
+        names = {rec.name for rec in r.records}
+        assert any(n.endswith(":decode") for n in names)
+        assert any(n.endswith(":train_step") for n in names)
+        assert len({n.split(":")[0] for n in names if ":" in n}) >= 2
+        assert names & {a.name for a in APPS}
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 50),
+           pool_idx=st.integers(0, len(_POOLS) - 1),
+           policy=st.sampled_from(list(POLICY_NAMES)))
+    def test_uncapped_nonpreemptive_invariants(self, seed, pool_idx,
+                                               policy):
+        jobs = _mixed_model_jobs(seed, pool_idx, 0.0)
+        r = _model_run(jobs, pool_idx, policy, None, None)
+        TestColdStartMixedFuzz._check_structure(self, jobs, r)
+        self._check_edf_tiered(jobs, r)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 50),
+           pool_idx=st.integers(0, len(_POOLS) - 1),
+           policy=st.sampled_from(["min-energy", "d-dvfs", "risk-aware"]),
+           cap_kind=st.sampled_from(list(_CAPS)),
+           preempt=st.sampled_from([False, True]),
+           quantum=st.floats(0.05, 1.5))
+    def test_capped_preemptive_invariants(self, seed, pool_idx, policy,
+                                          cap_kind, preempt, quantum):
+        jobs = _mixed_model_jobs(seed, pool_idx, quantum)
+        if cap_kind == "none":
+            coord = None
+        elif cap_kind == "inf":
+            coord = PowerCapCoordinator(math.inf, guard=0.15)
+        else:
+            f = _model_fixture()
+            _, pool, n_dev = _POOLS[pool_idx]
+            r0 = _model_run(jobs, pool_idx, policy, None, None)
+            if pool is not None:
+                led = PowerTelemetry.from_result(r0, pool=pool)
+                idle = sum(c.idle_power() for c in pool)
+            else:
+                idle_w = f["testbed"].idle_power()
+                led = PowerTelemetry.from_result(r0, idle_powers=idle_w,
+                                                 n_devices=n_dev)
+                idle = idle_w * n_dev
+            coord = PowerCapCoordinator(
+                idle + 0.6 * max(led.peak_w - idle, 1.0),
+                grant_policy="slack-weighted", guard=0.15)
+        mgr = PreemptionManager(_ARMED) if preempt else None
+        r = _model_run(jobs, pool_idx, policy, coord, mgr)
+        TestColdStartMixedFuzz._check_structure(self, jobs, r)
+
+    def test_segmented_never_preempted_identity_on_mixed_stream(self):
+        """The PR 5 differential identity extends to the model-derived
+        mix: trigger-disabled segmentation reproduces the plain engine
+        bit-for-bit on a paper+serving+training stream."""
+        jobs = _mixed_model_jobs(7, 3, 0.2)
+        a = _model_run(jobs, 3, "min-energy", None, None)
+        mgr = PreemptionManager(_OFF)
+        b = _model_run(jobs, 3, "min-energy", None, mgr)
+        _assert_identical(a, b)
+        assert mgr.stats.preemptions == 0
 
 
 # ---------------------------------------------------------------------- #

@@ -30,10 +30,13 @@ from repro.core import (AdmissionController, BEST_EFFORT_TIER,
                         ColdStartSynthesizer, EnergyTimePredictor,
                         FacilityCoordinator, FederatedPreemptionManager,
                         Job, PowerCapCoordinator, PredictorConfig,
-                        PreemptionManager, SLO_TIER, Testbed, build_dataset,
-                        make_workload, multi_rack_workload,
-                        multi_tenant_workload, profile_features,
-                        rescue_stress_workload, run_schedule)
+                        PreemptionManager, SLO_TIER, Testbed, V5E_CLASS,
+                        V5P_CLASS, build_dataset, make_workload,
+                        merge_workloads, model_app_suite,
+                        multi_rack_workload, multi_tenant_workload,
+                        profile_features, register_model_apps,
+                        rescue_stress_workload, run_schedule,
+                        serving_workload, training_workload)
 from repro.core.gbdt import GBDTParams
 from repro.core.policies import POLICY_NAMES
 
@@ -127,6 +130,22 @@ FED_CAP_W = 375.0
 FED_GUARD = 0.2
 FED_UTIL = 0.7
 FED_SLOWDOWN = {0: 3.0}
+
+#: Model-derived canonical scenario (PR 10): a diurnal serving mix plus a
+#: background training stream over the repo's *own* model-derived app
+#: suite (:func:`model_app_suite` — per-(config, phase) apps whose
+#: counters come from ``roofline/analysis.py``), scheduled min-energy on a
+#: two-class pool (v5p + v5e). The derived apps' feature vectors enter
+#: the same table the paper apps use (:func:`register_model_apps`), so
+#: this trace pins the whole derivation path — analytic counters →
+#: kind-specific latent knobs → profiling → prediction → dispatch —
+#: against silent drift. Non-vacuity below keeps the mix live (≥1 decode,
+#: ≥1 train step, ≥2 architectures dispatched).
+MODELS_KEY = "min-energy|models|0"
+MODELS_SERVE_JOBS = 14
+MODELS_TRAIN_JOBS = 4
+MODELS_JOBS = MODELS_SERVE_JOBS + MODELS_TRAIN_JOBS
+MODELS_POOL = (V5P_CLASS, V5E_CLASS)
 _GBDT = dict(iterations=80, depth=3, learning_rate=0.15)
 PREDICTOR_CONFIG = PredictorConfig(
     gbdt=GBDTParams(l2_leaf_reg=5.0, **_GBDT),
@@ -203,6 +222,9 @@ def compute_traces() -> dict:
     res, _, _ = _federation_run()
     trace = trace_of(res.records)
     out[FED_KEY] = {"digest": digest_of(trace), "records": trace}
+    res, _ = _models_run()
+    trace = trace_of(res.records)
+    out[MODELS_KEY] = {"digest": digest_of(trace), "records": trace}
     _CACHE["traces"] = out
     return out
 
@@ -329,6 +351,28 @@ def _federation_run():
                          preemption=pre)
         _CACHE["federation"] = (r, fac, pre)
     return _CACHE["federation"]
+
+
+def _models_run():
+    """The model-derived canonical run, cached with the jobs so the gate
+    tests can assert non-vacuity (decode + train apps from ≥2
+    architectures really dispatched)."""
+    if "models" not in _CACHE:
+        f = _fixture()
+        suite = model_app_suite()
+        features = dict(f["features"])
+        features.update(register_model_apps(None, f["testbed"]))
+        pool = list(MODELS_POOL)
+        jobs = merge_workloads(
+            serving_workload(suite, f["testbed"], n_jobs=MODELS_SERVE_JOBS,
+                             seed=0, n_devices=len(pool), pool=pool),
+            training_workload(suite, f["testbed"], n_jobs=MODELS_TRAIN_JOBS,
+                              seed=1, n_devices=len(pool), pool=pool))
+        r = run_schedule(jobs, "min-energy", Testbed(seed=100),
+                         predictor=f["predictor"], app_features=features,
+                         n_devices=len(pool), device_classes=pool)
+        _CACHE["models"] = (r, jobs)
+    return _CACHE["models"]
 
 
 def load_golden() -> dict:
@@ -520,12 +564,46 @@ def test_federation_golden_not_vacuous():
     assert any(rec.device in FED_SLOWDOWN for rec in r.records)
 
 
+def test_models_golden_trace():
+    """The model-derived canonical run == its checked-in trace — the
+    derivation-path (analytic counters / kind knobs / profiling /
+    registration / heterogeneous dispatch) drift gate."""
+    golden = load_golden()["traces"][MODELS_KEY]
+    fresh = compute_traces()[MODELS_KEY]
+    for i, (got, want) in enumerate(zip(fresh["records"],
+                                        golden["records"])):
+        assert got == want, (
+            f"{MODELS_KEY} record {i} drifted "
+            f"(columns: {_COLUMNS}):\n got {got}\nwant {want}")
+    assert len(fresh["records"]) == len(golden["records"])
+    assert fresh["digest"] == golden["digest"]
+
+
+def test_models_golden_not_vacuous():
+    """The model-derived trace must really exercise the mix: ≥1 decode
+    app, ≥1 train-step app and ≥2 distinct architectures dispatched, on
+    both pool classes — otherwise the gate silently stops covering the
+    derived-suite path."""
+    r, jobs = _models_run()
+    assert len(r.records) == MODELS_JOBS
+    names = [rec.name for rec in r.records]
+    assert sum(1 for n in names if n.endswith(":decode")) >= 1
+    assert sum(1 for n in names if n.endswith(":train_step")) >= 1
+    archs = {n.split(":")[0] for n in names if ":" in n}
+    assert len(archs) >= 2
+    assert {rec.device for rec in r.records} == set(range(len(MODELS_POOL)))
+    # every record belongs to a derived (config, phase) app — the mix
+    # generators must never leak paper or kernel apps into this trace
+    assert all(":" in n for n in names)
+
+
 def test_golden_file_is_self_consistent():
     """Stored digests match the stored records (catches hand-edits)."""
     g = load_golden()
     expected = {f"{p}|{s}" for p in POLICY_NAMES for s in SEEDS}
     expected |= {CAP_KEY, PRE_FIRE_KEY, PRE_DECLINE_KEY,
-                 TEN_SHED_KEY, TEN_RESCUE_KEY, COLD_KEY, FED_KEY}
+                 TEN_SHED_KEY, TEN_RESCUE_KEY, COLD_KEY, FED_KEY,
+                 MODELS_KEY}
     assert set(g["traces"]) == expected
     for key, entry in g["traces"].items():
         assert digest_of(entry["records"]) == entry["digest"], key
@@ -542,5 +620,8 @@ def test_golden_file_is_self_consistent():
         elif key == FED_KEY:
             # preempted/migrated jobs split into segments
             assert len(entry["records"]) > FED_JOBS, key
+        elif key == MODELS_KEY:
+            # non-preemptive uncapped mix: one record per merged job
+            assert len(entry["records"]) == MODELS_JOBS, key
         else:
             assert len(entry["records"]) == len(PAPER_APPS), key
